@@ -1,0 +1,72 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  table1_comm          Tables 1-3 / Fig. 1 communication volumes
+  table4_walltime      Table 4 / App. F wall-clock model
+  sde_drift            Theorem 3.1 Slow-SDE drift ratios
+  fig2_generalization  Fig. 2 generalization ordering (laptop scale)
+  roofline             §Roofline terms from the dry-run records
+  microbench           us/call for the hot kernels (CPU reference path)
+
+Prints a ``name,us_per_call,derived`` CSV at the end.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def _microbench(csv_rows: list) -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+
+    print("\n== kernel microbench (CPU jnp reference path) ==")
+    cases = {
+        "rms_norm/4x1024x2048": lambda: ref.rms_norm(
+            jax.random.normal(jax.random.PRNGKey(0), (4, 1024, 2048)),
+            jnp.ones((2048,))),
+        "attention/1x512x8x64": lambda: ref.attention(
+            jax.random.normal(jax.random.PRNGKey(0), (1, 512, 8, 64)),
+            jax.random.normal(jax.random.PRNGKey(1), (1, 512, 2, 64)),
+            jax.random.normal(jax.random.PRNGKey(2), (1, 512, 2, 64))),
+        "adamw/1M": lambda: ref.adamw_update(
+            jnp.ones((1 << 20,)), jnp.zeros((1 << 20,)),
+            jnp.zeros((1 << 20,)), jnp.ones((1 << 20,)), lr=1e-3, beta1=0.9,
+            beta2=0.999, eps=1e-8, weight_decay=0.1, step=1.0),
+    }
+    import jax as _jax
+    for name, fn in cases.items():
+        jitted = _jax.jit(fn)
+        _jax.block_until_ready(jitted())  # compile
+        t0 = time.perf_counter()
+        n = 5
+        for _ in range(n):
+            _jax.block_until_ready(jitted())
+        us = (time.perf_counter() - t0) / n * 1e6
+        print(f"  {name:28s} {us:10.1f} us/call")
+        csv_rows.append((f"microbench/{name}", f"{us:.1f}", ""))
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import (fig2_generalization, perf_report, roofline,
+                            sde_drift, table1_comm, table4_walltime)
+
+    csv_rows: list = []
+    table1_comm.run(csv_rows)
+    table4_walltime.run(csv_rows)
+    sde_drift.run(csv_rows)
+    fast = os.environ.get("REPRO_BENCH_FAST", "1") == "1"
+    fig2_generalization.run(csv_rows, steps=120 if fast else 400)
+    roofline.run(csv_rows)
+    perf_report.run(csv_rows)
+    _microbench(csv_rows)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper Tables 1-3 / Fig. 1: communication volume of every synchronization
+strategy under the paper's exact recipes (ImageNet: ResNet-152 B=4096 200ep,
+ViT-B B=4096/16384 300ep; cosine+linear+step decay).
+
+Comm volume = rounds/steps relative to data-parallel (one all-reduce per
+step) — computed from the actual H-trace, compared against the paper's
+reported numbers."""
+from __future__ import annotations
+
+from repro.configs.base import RunConfig
+from repro.core import schedules
+from repro.optim.lr import make_lr_fn
+
+IMAGENET = 1_281_167
+
+# (label, recipe kwargs, paper-reported comm %, tolerance)
+CASES = [
+    # paper Table 1(a)'s comm column is cropped in the text; Fig. 1 reports
+    # 20.1% for the Hb=4 recipe, and Tables 2a/3a bracket Hb=2 at 40-43%.
+    ("ResNet152/B4096/QSR(Hb=2,a=0.2)",
+     dict(schedule="qsr", h_base=2, alpha=0.2, peak_lr=0.8,
+          total_steps=round(IMAGENET / 4096 * 200),
+          warmup_steps=round(IMAGENET / 4096 * 5)), 41.5, 3.0),
+    ("ResNet152/B4096/QSR(Hb=4,a=0.25)",
+     dict(schedule="qsr", h_base=4, alpha=0.25, peak_lr=0.8,
+          total_steps=round(IMAGENET / 4096 * 200),
+          warmup_steps=round(IMAGENET / 4096 * 5)), 20.1, 4.0),
+    ("ResNet152/B16384/QSR(Hb=2,a=0.2,lr=1.6)",
+     dict(schedule="qsr", h_base=2, alpha=0.2, peak_lr=1.6,
+          total_steps=round(IMAGENET / 16384 * 200),
+          warmup_steps=round(IMAGENET / 16384 * 5)), 42.8, 5.0),
+    ("ResNet152/B16384/QSR(Hb=4,a=0.2,lr=1.6)",
+     dict(schedule="qsr", h_base=4, alpha=0.2, peak_lr=1.6,
+          total_steps=round(IMAGENET / 16384 * 200),
+          warmup_steps=round(IMAGENET / 16384 * 5)), 21.9, 4.0),
+    ("ViT-B/B4096/QSR(Hb=4,a=0.0175)",
+     dict(schedule="qsr", h_base=4, alpha=0.0175, peak_lr=0.008,
+          total_steps=round(IMAGENET / 4096 * 300), warmup_steps=10_000),
+     10.4, 5.0),
+    ("ViT-B/B16384/QSR(Hb=4,a=0.0175,lr=0.016)",
+     dict(schedule="qsr", h_base=4, alpha=0.0175, peak_lr=0.016,
+          total_steps=round(IMAGENET / 16384 * 300), warmup_steps=2_500),
+     16.1, 8.0),
+    ("ViT-B/B16384/QSR(Hb=8,a=0.01)",
+     dict(schedule="qsr", h_base=8, alpha=0.01, peak_lr=0.016,
+          total_steps=round(IMAGENET / 16384 * 300), warmup_steps=2_500),
+     9.8, 5.0),
+    ("ViT-B/B4096/step-decay/QSR(Hb=4,a=0.015)",
+     dict(schedule="qsr", lr_schedule="step", h_base=4, alpha=0.015,
+          peak_lr=0.008, total_steps=round(IMAGENET / 4096 * 300),
+          warmup_steps=10_000), 12.7, 6.0),
+    ("ViT-B/B4096/step-decay/QSR(Hb=8,a=0.015)",
+     dict(schedule="qsr", lr_schedule="step", h_base=8, alpha=0.015,
+          peak_lr=0.008, total_steps=round(IMAGENET / 4096 * 300),
+          warmup_steps=10_000), 7.2, 4.0),
+    ("ViT-B/B4096/constant H=4",
+     dict(schedule="constant", h_base=4,
+          total_steps=round(IMAGENET / 4096 * 300)), 25.0, 0.01),
+    ("ViT-B/B4096/constant H=8",
+     dict(schedule="constant", h_base=8,
+          total_steps=round(IMAGENET / 4096 * 300)), 12.5, 0.01),
+    ("ViT-B/B4096/inverse(b=0.03,Hb=4)",
+     dict(schedule="inverse", beta=0.03, h_base=4, peak_lr=0.008,
+          total_steps=round(IMAGENET / 4096 * 300), warmup_steps=10_000),
+     None, None),
+    ("ViT-B/B4096/postlocal(t0=50%,H=8)",
+     dict(schedule="postlocal", h_base=8, switch_frac=0.5,
+          total_steps=round(IMAGENET / 4096 * 300)), None, None),
+]
+
+
+def run(csv_rows: list | None = None) -> None:
+    print("\n== Table 1-3 / Fig. 1: communication volume vs paper ==")
+    print(f"{'recipe':52s} {'comm%':>8s} {'paper%':>8s} {'match':>6s}")
+    for label, kw, paper, tol in CASES:
+        run_cfg = RunConfig(**kw)
+        frac = 100 * schedules.comm_fraction(run_cfg, make_lr_fn(run_cfg))
+        ok = "-" if paper is None else ("yes" if abs(frac - paper) <= tol
+                                        else "NO")
+        ps = "-" if paper is None else f"{paper:.1f}"
+        print(f"{label:52s} {frac:8.2f} {ps:>8s} {ok:>6s}")
+        if csv_rows is not None:
+            csv_rows.append((f"table1_comm/{label}", "", f"{frac:.2f}%"))
+        if paper is not None:
+            assert abs(frac - paper) <= tol, (label, frac, paper)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Serve a small model with batched requests: prefill + decode, including
+the sliding-window ring cache used by the long_500k dry-run shape.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch gemma3-4b
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry as R
+from repro.launch.serve import generate
+from repro.models import api, param as pm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = R.get_smoke_config(args.arch)
+    mod = api.get_module(cfg)
+    params = pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    # full-cache serving
+    t0 = time.time()
+    full = generate(cfg, params, prompts, gen_len=args.gen)
+    t_full = time.time() - t0
+    print(f"full cache   : {args.batch}x{args.gen} tokens in {t_full:.2f}s")
+
+    # ring-buffer window serving (the long-context mode) — identical results
+    # whenever the window covers the live context
+    t0 = time.time()
+    ring = generate(cfg, params, prompts, gen_len=args.gen,
+                    max_len=args.prompt_len + args.gen,
+                    window_override=args.prompt_len + args.gen // 2)
+    t_ring = time.time() - t0
+    same = bool(np.array_equal(np.asarray(full), np.asarray(ring)))
+    print(f"ring window  : {args.batch}x{args.gen} tokens in {t_ring:.2f}s "
+          f"(matches full-cache within window: {same})")
+    print("sample:", np.asarray(full[0, args.prompt_len:]).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Pytree checkpointing (msgpack + raw little-endian buffers).
+
+Round-trip-exact for any pytree of jnp arrays / numpy arrays / python
+scalars.  Layout: <dir>/state.msgpack (+ step metadata); arrays stored as
+{shape, dtype, data-bytes} — no pickle, stable across sessions.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(obj):
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        a = np.asarray(obj)
+        return {b"__nd__": True, b"dtype": a.dtype.str, b"shape": list(a.shape),
+                b"data": a.tobytes()}
+    return obj
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and (b"__nd__" in obj or "__nd__" in obj):
+        g = lambda k: obj.get(k.encode()) if obj.get(k.encode()) is not None else obj.get(k)
+        a = np.frombuffer(g("data"), dtype=np.dtype(g("dtype")))
+        return a.reshape(g("shape")).copy()
+    return obj
+
+
+def save(path: str, tree: Any, *, step: int | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "step": step,
+        "leaves": [_encode(jax.device_get(x)) for x in leaves],
+    }
+    tmp = os.path.join(path, "state.msgpack.tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, os.path.join(path, "state.msgpack"))
+
+
+def restore(path: str, like: Any) -> tuple[Any, int | None]:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    with open(os.path.join(path, "state.msgpack"), "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    leaves_like, treedef = jax.tree.flatten(like)
+    raw = [_decode(x) for x in payload["leaves"]]
+    assert len(raw) == len(leaves_like), (len(raw), len(leaves_like))
+    out = []
+    for got, want in zip(raw, leaves_like):
+        if isinstance(want, (jax.Array, np.ndarray, jnp.ndarray)):
+            w = np.asarray(want)
+            g = np.asarray(got)
+            assert g.shape == w.shape, (g.shape, w.shape)
+            out.append(jnp.asarray(g.astype(w.dtype)))
+        else:
+            out.append(got)
+    return jax.tree.unflatten(treedef, out), payload.get("step")
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "state.msgpack"))

@@ -1,0 +1,54 @@
+"""Architecture registry: --arch <id> -> (config, smoke_config, default policy).
+
+`policy` is the default sharding policy (DESIGN.md §2):
+  dp   — one replica per data rank (paper-faithful worker granularity)
+  fsdp — one replica per pod (DiLoCo-style mapping for >100B models)
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    module: str
+    policy: str
+    notes: str = ""
+
+
+ARCHS: dict[str, ArchEntry] = {
+    "starcoder2-3b":   ArchEntry("starcoder2_3b", "dp"),
+    "paligemma-3b":    ArchEntry("paligemma_3b", "dp"),
+    "gemma3-4b":       ArchEntry("gemma3_4b", "dp"),
+    "whisper-base":    ArchEntry("whisper_base", "dp"),
+    "zamba2-1.2b":     ArchEntry("zamba2_1p2b", "dp"),
+    "qwen1.5-110b":    ArchEntry("qwen1p5_110b", "fsdp"),
+    "mamba2-130m":     ArchEntry("mamba2_130m", "dp"),
+    "dbrx-132b":       ArchEntry("dbrx_132b", "fsdp"),
+    "phi3-medium-14b": ArchEntry("phi3_medium_14b", "dp",
+                                 "AdamW moments dominate; fsdp also supported"),
+    "kimi-k2-1t-a32b": ArchEntry("kimi_k2_1t", "fsdp"),
+    "vit-b16":         ArchEntry("vit_b", "dp", "paper's own architecture"),
+}
+
+
+def _mod(arch: str):
+    return importlib.import_module(f"repro.configs.{ARCHS[arch].module}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _mod(arch).smoke_config()
+
+
+def get_policy(arch: str) -> str:
+    return ARCHS[arch].policy
+
+
+ASSIGNED = [a for a in ARCHS if a != "vit-b16"]

@@ -1,0 +1,64 @@
+"""Fused AdamW update — Pallas TPU kernel.
+
+The innermost loop of every local step in Local AdamW (paper Alg. 2 line 12):
+p, m, v are streamed through VMEM in 1D blocks; all five elementwise ops
+(two moment updates, bias correction, weight decay, parameter step) fuse
+into one pass, so HBM traffic is the roofline minimum (read p,m,v,g; write
+p,m,v) instead of one round-trip per op.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK = 64 * 1024  # 64K elements * (4B fp32 * ~7 tensors) ~ 1.8 MiB VMEM
+
+
+def _adamw_kernel(p_ref, m_ref, v_ref, g_ref, sc_ref, po_ref, mo_ref, vo_ref,
+                  *, beta1, beta2, eps, weight_decay):
+    lr = sc_ref[0]
+    step = sc_ref[1]
+    g = g_ref[...].astype(jnp.float32)
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+    pf = p_ref[...].astype(jnp.float32)
+    po_ref[...] = (pf - lr * (upd + weight_decay * pf)).astype(po_ref.dtype)
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+@partial(jax.jit,
+         static_argnames=("beta1", "beta2", "eps", "weight_decay", "interpret"))
+def adamw_update(p, m, v, g, *, lr, beta1, beta2, eps, weight_decay, step,
+                 interpret: bool = False):
+    """All tensors same shape; m, v fp32. Returns (new_p, new_m, new_v)."""
+    shape = p.shape
+    n = p.size
+    blk = min(_BLOCK, n)
+    pad = (-n) % blk
+    flat = lambda x: jnp.pad(x.reshape(-1), (0, pad))
+    pf, mf, vf, gf = flat(p), flat(m), flat(v), flat(g)
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32),
+                         jnp.asarray(step, jnp.float32)])
+    grid = ((n + pad) // blk,)
+    spec = pl.BlockSpec((blk,), lambda i: (i,))
+    po, mo, vo = pl.pallas_call(
+        partial(_adamw_kernel, beta1=beta1, beta2=beta2, eps=eps,
+                weight_decay=weight_decay),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(pf.shape, p.dtype),
+                   jax.ShapeDtypeStruct(mf.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(vf.shape, jnp.float32)],
+        interpret=interpret,
+    )(pf, mf, vf, gf, scalars)
+    unflat = lambda x: x[:n].reshape(shape)
+    return unflat(po), unflat(mo), unflat(vo)

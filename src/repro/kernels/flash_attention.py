@@ -1,0 +1,129 @@
+"""Flash attention (causal GQA + sliding window + prefix-LM) — Pallas TPU.
+
+Tiling (MXU/VMEM-aware):
+  grid = (batch, q_heads, n_q_blocks, n_k_blocks); the innermost grid dim
+  walks K blocks while fp32 accumulators (running max / denominator / output)
+  persist in VMEM scratch — the classic online-softmax flash schedule.
+  Default blocks 128x128: q,k,v tiles are 128x128xbf16 = 32 KiB each and the
+  fp32 score tile is 64 KiB — comfortably inside the ~16 MiB VMEM budget, and
+  every matmul dim is a multiple of the 128-lane MXU width.
+
+GQA is expressed in the BlockSpec index maps: the kv index map divides the
+query-head grid coordinate by the group size, so no head replication ever
+materializes in HBM.
+
+`window`/`prefix_len` must be static here (Python ints): the TPU kernel
+specializes the mask.  The ring-buffer decode path (traced k_positions)
+stays on the jnp reference — see ops.flash_attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, prefix_len: int,
+                  q_offset: int, block_q: int, block_k: int, n_k: int,
+                  kv_len: int):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    i = pl.program_id(2)
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # [bq, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bk, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = q @ k.T * scale                                 # [bq, bk]
+
+    q_idx = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + q_offset
+    k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = k_idx < kv_len
+    if causal:
+        ok &= k_idx <= q_idx
+    if window > 0:
+        ok &= k_idx > q_idx - window
+    if prefix_len > 0:
+        ok |= k_idx < prefix_len
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, :, 0, :] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "prefix_len", "q_offset",
+                              "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, prefix_len=0,
+                    q_offset=0, scale=None, block_q=128, block_k=128,
+                    interpret=False):
+    """q [B,Sq,Hq,D]; k,v [B,Sk,Hkv,D] -> [B,Sq,Hq,D]."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    window = int(window)
+
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    n_q = (sq + pad_q) // bq
+    n_k = (sk + pad_k) // bk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        prefix_len=prefix_len, q_offset=q_offset, block_q=bq, block_k=bk,
+        n_k=n_k, kv_len=sk)
+
+    out = _call(kernel, q, k, v, b, hq, n_q, n_k, bq, bk, d, g, sq, pad_q,
+                interpret)
+    return out[:, :sq]
+
+
+def _call(kernel, q, k, v, b, hq, n_q, n_k, bq, bk, d, g, sq, pad_q,
+          interpret):
+    from jax.experimental.pallas import tpu as pltpu
+    scratch = [pltpu.VMEM((bq, d), jnp.float32),
+               pltpu.VMEM((bq,), jnp.float32),
+               pltpu.VMEM((bq,), jnp.float32)]
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda b_, h, i, j: (b_, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h, i, j: (b_, j, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h, i, j: (b_, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d), lambda b_, h, i, j: (b_, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq + pad_q, hq, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

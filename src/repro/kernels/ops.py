@@ -1,0 +1,74 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Backend selection:
+  * ``"jnp"``       — pure-jnp reference (default on CPU; identical math to ref.py)
+  * ``"pallas"``    — real Pallas lowering (TPU target)
+  * ``"interpret"`` — Pallas kernel body interpreted on CPU (used by tests)
+
+Models call these entry points; they never touch pallas_call directly.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "jnp")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("jnp", "pallas", "interpret"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    if _BACKEND == "jnp":
+        return ref.rms_norm(x, scale, eps)
+    from repro.kernels import rmsnorm as _k
+    return _k.rms_norm(x, scale, eps=eps, interpret=(_BACKEND == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    prefix_len: int = 0, q_offset=0, scale: float | None = None,
+                    k_positions=None):
+    """q [B,Sq,H,D], k/v [B,Sk,Hkv,D] (GQA by head broadcast)."""
+    import numpy as _np
+    ragged = getattr(q_offset, "ndim", 0) and _np.ndim(q_offset) > 0
+    if _BACKEND == "jnp" or k_positions is not None or ragged:
+        # ring-buffer decode (k_positions) stays on the jnp path: it is a
+        # [B,1,H,D]x[B,L,H,D] contraction with a data-dependent mask.
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             prefix_len=prefix_len, q_offset=q_offset,
+                             scale=scale, k_positions=k_positions)
+    from repro.kernels import flash_attention as _k
+    return _k.flash_attention(q, k, v, causal=causal, window=window,
+                              prefix_len=prefix_len, q_offset=q_offset,
+                              scale=scale, interpret=(_BACKEND == "interpret"))
+
+
+def adamw_update(p, m, v, g, *, lr, beta1, beta2, eps, weight_decay, step):
+    """Fused AdamW update for one flat tensor. Returns (new_p, new_m, new_v)."""
+    if _BACKEND == "jnp":
+        return ref.adamw_update(p, m, v, g, lr=lr, beta1=beta1, beta2=beta2,
+                                eps=eps, weight_decay=weight_decay, step=step)
+    from repro.kernels import adamw_update as _k
+    return _k.adamw_update(p, m, v, g, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+                           weight_decay=weight_decay, step=step,
+                           interpret=(_BACKEND == "interpret"))
+
+
+def swiglu(x, wg, wi):
+    """Fused silu(x@wg)*(x@wi) — the MLP hot spot."""
+    if _BACKEND == "jnp":
+        return ref.swiglu(x, wg, wi)
+    from repro.kernels import swiglu as _k
+    return _k.swiglu(x, wg, wi, interpret=(_BACKEND == "interpret"))

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU fast path).
+
+These define the semantics the kernels must match bit-for-bit (up to fp
+tolerance). Tests sweep shapes/dtypes and assert_allclose kernels vs these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def _mask(sq: int, sk: int, *, causal: bool, window: int, prefix_len: int,
+          q_offset, k_positions=None) -> jax.Array:
+    """Returns [sq,sk] — or [B,sq,sk] when q_offset is a per-batch array
+    (ragged continuous-batching decode)."""
+    q_offset = jnp.asarray(q_offset)
+    if q_offset.ndim == 1:                      # per-batch offsets [B]
+        q_offset = q_offset[:, None, None]
+        lead = (q_offset.shape[0], sq, sk)
+    else:
+        lead = (sq, sk)
+    q_idx = jnp.arange(sq)[:, None] + q_offset  # absolute position of queries
+    if k_positions is not None:
+        k_idx = k_positions[None, :]            # ring-buffer absolute positions
+        valid = k_idx >= 0
+    else:
+        k_idx = jnp.arange(sk)[None, :]
+        valid = jnp.ones((1, sk), bool)
+    ok = jnp.broadcast_to(valid, lead)
+    if causal:
+        ok &= k_idx <= q_idx
+    # `window` may be a traced per-layer value (scan xs); <=0 disables it.
+    window = jnp.asarray(window)
+    ok &= (window <= 0) | (k_idx > q_idx - window)
+    if prefix_len:
+        ok |= valid & (k_idx < prefix_len)  # bidirectional prefix (VLM prefix-LM)
+    return ok
+
+
+def attention(q, k, v, *, causal=True, window=0, prefix_len=0, q_offset=0,
+              scale=None, k_positions=None):
+    """q [B,Sq,Hq,D]; k,v [B,Sk,Hkv,D]; GQA via head-group broadcast."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    dtype = q.dtype
+    scale = scale if scale is not None else d ** -0.5
+    if dtype == jnp.bfloat16:
+        # bf16 MAC with f32 accumulation (MXU-native): avoids materializing
+        # f32 copies of the (large) K/V tensors — bf16xbf16 products are
+        # exact in f32, so this equals the upcast-first formulation.
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q.reshape(b, sq, hkv, g, d), k,
+                       preferred_element_type=jnp.float32) * scale
+        vf = v
+    else:
+        qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    m = _mask(sq, sk, causal=causal, window=window, prefix_len=prefix_len,
+              q_offset=q_offset, k_positions=k_positions)
+    if m.ndim == 3:   # per-batch mask [B,sq,sk] (ragged decode)
+        s = jnp.where(m[:, None, None], s, -1e30)
+    else:
+        s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, hq, d).astype(dtype)
+
+
+def adamw_update(p, m, v, g, *, lr, beta1, beta2, eps, weight_decay, step):
+    """AdamW with bias correction; moments fp32, params kept in input dtype."""
+    gf = g.astype(jnp.float32)
+    m1 = beta1 * m + (1.0 - beta1) * gf
+    v1 = beta2 * v + (1.0 - beta2) * jnp.square(gf)
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    upd = (m1 / bc1) / (jnp.sqrt(v1 / bc2) + eps)
+    pf = p.astype(jnp.float32)
+    p1 = pf - lr * (upd + weight_decay * pf)
+    return p1.astype(p.dtype), m1, v1
+
+
+def swiglu(x, wg, wi):
+    """silu(x @ wg) * (x @ wi) in fp32, cast back to x.dtype."""
+    xf = x.astype(jnp.float32)
+    g = xf @ wg.astype(jnp.float32)
+    u = xf @ wi.astype(jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)

@@ -1,0 +1,112 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+# ^ MUST run before any other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination on placeholder host devices and record roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b \
+      --shape train_4k [--multi-pod] [--parallel-baseline] [--out FILE]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import RunConfig
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, build_case
+
+
+def run_one(arch, shape, *, multi_pod, policy=None,
+            parallel_baseline=False, run_cfg=None,
+            verbose=True):
+    from repro.configs import registry as R
+
+    policy = policy or R.get_policy(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    case = build_case(arch, shape, mesh, policy=policy,
+                      run_cfg=run_cfg, parallel_baseline=parallel_baseline)
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                         out_shardings=case.out_shardings)
+        lowered = jitted.lower(*case.args)
+        compiled = lowered.compile()
+    t1 = time.time()
+    stats = hlo_analysis.summarize(compiled, n_devices=n_dev)
+    rec = {
+        "arch": arch, "shape": shape, "policy": policy,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "fn": case.meta["fn_name"],
+        "steps_per_program": case.meta.get("steps_per_program", 1),
+        "workers": case.meta.get("w"),
+        "h": case.meta.get("h"),
+        "ring": case.meta.get("ring"),
+        "kv_len": case.meta.get("kv_len"),
+        "compile_s": round(t1 - t0, 1),
+        **stats,
+    }
+    if verbose:
+        mem = stats["per_device_memory"]
+        print(f"[{arch} x {shape} x {rec['mesh']} {rec['fn']}] "
+              f"compile {rec['compile_s']}s  "
+              f"flops/dev {stats['flops']:.3e}  "
+              f"bytes/dev {stats['bytes_accessed']:.3e}  "
+              f"coll/dev {stats['collective_bytes_total']:.3e}  "
+              f"arg {mem['argument_bytes']/2**30:.2f}GiB "
+              f"temp {mem['temp_bytes']/2**30:.2f}GiB")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--policy", default=None, choices=["dp", "fsdp", None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--parallel-baseline", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import registry as R
+
+    archs = R.ASSIGNED if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    records, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    records.append(run_one(arch, shape, multi_pod=mp,
+                                           policy=args.policy,
+                                           parallel_baseline=args.parallel_baseline))
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    failures.append({"arch": arch, "shape": shape,
+                                     "mesh": "2x16x16" if mp else "16x16",
+                                     "error": repr(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"records": records, "failures": failures}, f, indent=1)
+    print(f"\n{len(records)} ok, {len(failures)} failed")
+    if failures:
+        for f_ in failures:
+            print("FAIL:", f_)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

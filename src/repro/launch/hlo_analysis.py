@@ -1,0 +1,125 @@
+"""Extract roofline inputs from a compiled (AOT) executable.
+
+ - FLOPs / bytes-accessed from compiled.cost_analysis()
+ - per-device memory from compiled.memory_analysis()
+ - collective bytes parsed from the optimized HLO text: operand sizes of
+   all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_RG_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_RG_LIST = re.compile(r"replica_groups=\{\{([0-9,{} ]*)\}\}")
+
+
+def _crosses_pod(line: str, pod_size: int) -> bool | None:
+    """True if any replica group spans devices from different pods
+    (device id // pod_size differs).  None if no group info found."""
+    m = _RG_IOTA.search(line)
+    if m:
+        g, n = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims)))
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.reshape(dims).transpose(perm).reshape(-1)
+        groups = ids.reshape(g, n)
+        pods = groups // pod_size
+        return bool((pods != pods[:, :1]).any())
+    m = _RG_LIST.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.replace("{", "").replace("}", "").split(",") if x.strip()]
+            if len({i // pod_size for i in ids}) > 1:
+                return True
+        return False
+    return None
+
+
+def collective_bytes(hlo_text: str, pod_size: int = 0) -> dict[str, int]:
+    """Sum *result* sizes of collective ops in the optimized HLO, per kind.
+
+    For all-reduce / all-to-all / collective-permute, result size == operand
+    size.  For all-gather the result is the gathered (full) tensor and for
+    reduce-scatter the operand is the full tensor; in both cases the bytes
+    that actually cross links per device are ~the full-tensor size x
+    (n-1)/n, so the full-tensor size is the right roofline input.  We report
+    the larger of (result, operands) per op.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["dci"] = 0  # pod-crossing bytes (multi-pod meshes only)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(.*)$", s)
+        if m is None:
+            continue
+        rest = m.group(1)
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rest):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rest:
+            continue  # avoid double counting start/done pairs
+        shapes = _SHAPE_RE.findall(rest)
+        if not shapes:
+            continue
+        # result type(s) appear before the op name; operands may not carry
+        # inline types in optimized HLO.  Take result tuple size.
+        head = rest.split(kind)[0]
+        rshapes = _SHAPE_RE.findall(head)
+        use = rshapes if rshapes else shapes
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in use)
+        out[kind] += nbytes
+        if pod_size and _crosses_pod(line, pod_size):
+            out["dci"] += nbytes
+    return out
+
+
+def summarize(compiled, *, n_devices: int) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    pod_size = 256 if n_devices > 256 else 0
+    coll = collective_bytes(hlo, pod_size=pod_size)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "per_device_memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "collective_bytes": coll,
+        "collective_bytes_total": sum(v for k, v in coll.items()
+                                      if k != "dci"),
+        "dci_bytes": coll["dci"],
+        "n_devices": n_devices,
+    }

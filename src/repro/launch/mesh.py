@@ -1,0 +1,23 @@
+"""Production meshes for TPU v5e.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run pins the host-device count *before* any jax
+initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 4, n_model: int = 2, *, pods: int = 0):
+    """Small host-device mesh for tests (requires matching
+    xla_force_host_platform_device_count)."""
+    if pods:
+        return jax.make_mesh((pods, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

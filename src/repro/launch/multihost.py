@@ -1,0 +1,47 @@
+"""Multi-host / multi-pod process bootstrap for the production mesh.
+
+On real TPU v5e, each host owns 4 chips; a 16x16 pod is 64 hosts and the
+2-pod job is 128. `initialize()` wires `jax.distributed`, then
+`make_production_mesh()` (launch/mesh.py) builds the global mesh over
+`jax.devices()` exactly as the dry-run does over placeholder devices —
+the same `train_round` / `serve_step` programs run unchanged.
+
+Environment (set by scripts/launch_v5e_pod.sh):
+  REPRO_COORDINATOR   host:port of process 0
+  REPRO_NUM_PROCESSES total process count
+  REPRO_PROCESS_ID    this process's index
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def initialize() -> None:
+    coord = os.environ.get("REPRO_COORDINATOR")
+    if not coord:
+        return  # single-process (CPU dev / dry-run) — nothing to do
+    jax.distributed.initialize(
+        coordinator_address=coord,
+        num_processes=int(os.environ["REPRO_NUM_PROCESSES"]),
+        process_id=int(os.environ["REPRO_PROCESS_ID"]),
+    )
+
+
+def runtime_info() -> dict:
+    return {
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+        "local_devices": len(jax.local_devices()),
+        "global_devices": len(jax.devices()),
+        "platform": jax.devices()[0].platform,
+    }
+
+
+def assert_production_topology(*, multi_pod: bool) -> None:
+    want = 512 if multi_pod else 256
+    got = len(jax.devices())
+    assert got == want, (
+        f"expected {want} chips for the "
+        f"{'2x16x16' if multi_pod else '16x16'} mesh, found {got}")

@@ -1,0 +1,396 @@
+"""Assigned input shapes + ShapeDtypeStruct input specs for every
+(architecture x shape x mesh x policy) combination.
+
+`build_case()` returns everything the dry-run needs: the function to lower,
+abstract arguments, and in/out shardings — no device allocation (the
+shannon/kernels pattern: weak-type-correct, shardable stand-ins).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import local_update as LU
+from repro.models import api, param as pm
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str          # train | prefill | decode | long_decode
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k":    InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   InputShape("long_500k", 524_288, 1, "long_decode"),
+}
+
+
+def _ns(mesh, spec):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _state_specs(cfg, run_cfg, policy, mesh):
+    """PartitionSpec tree for the local-gradient runtime state."""
+    mod = api.get_module(cfg)
+    defs = mod.param_defs(cfg)
+    pspec = pm.param_specs(defs, policy, mesh, extra_leading=("worker",))
+    if run_cfg.optimizer == "sgd":
+        opt = {"mu": pspec, "step": P()}
+    else:
+        opt = {"m": pspec, "v": pspec, "step": P()}
+    return {"params": pspec, "opt": opt}
+
+
+def _abstract_state(cfg, run_cfg, w: int, dtype):
+    mod = api.get_module(cfg)
+    defs = mod.param_defs(cfg)
+    pabs = pm.abstract_params(defs, dtype)
+    padd = jax.tree.map(lambda s: SDS((w,) + s.shape, s.dtype), pabs)
+    f32 = lambda s: SDS(s.shape, jnp.float32)
+    if run_cfg.optimizer == "sgd":
+        opt = {"mu": jax.tree.map(f32, padd), "step": SDS((), jnp.int32)}
+    else:
+        opt = {"m": jax.tree.map(f32, padd), "v": jax.tree.map(f32, padd),
+               "step": SDS((), jnp.int32)}
+    return {"params": padd, "opt": opt}
+
+
+def _batch_abstract(cfg, lead: tuple[int, ...], seq: int):
+    """Per-family training batch with leading dims `lead` (e.g. (H, W, B))."""
+    b = {"tokens": SDS(lead + (seq,), jnp.int32),
+         "labels": SDS(lead + (seq,), jnp.int32)}
+    if cfg.family == "vlm":
+        b["prefix_embeds"] = SDS(lead + (cfg.n_img_tokens, cfg.d_model),
+                                 jnp.bfloat16)
+    if cfg.family == "audio":
+        b["frames"] = SDS(lead + (cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def _batch_specs(cfg, n_lead_extra: int, worker_axes, inner_data):
+    """Sharding for batch leaves: [*, W, B_loc, ...]."""
+    def spec(ndim_tail):
+        dims = [None] * n_lead_extra + [worker_axes, inner_data]
+        dims += [None] * ndim_tail
+        return P(*dims)
+    b = {"tokens": spec(1), "labels": spec(1)}
+    if cfg.family == "vlm":
+        b["prefix_embeds"] = spec(2)
+    if cfg.family == "audio":
+        b["frames"] = spec(2)
+    return b
+
+
+def _div(a: int, b: int) -> bool:
+    return b > 0 and a % b == 0
+
+
+@dataclasses.dataclass
+class Case:
+    fn: Any
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    meta: dict
+
+
+def build_case(arch: str, shape_name: str, mesh, *, policy: str,
+               run_cfg: RunConfig | None = None, h: int | None = None,
+               parallel_baseline: bool = False) -> Case:
+    from repro.configs import registry as R
+
+    cfg = R.get_config(arch)
+    shape = SHAPES[shape_name]
+    run_cfg = run_cfg or RunConfig(sharding=policy)
+    dtype = jnp.bfloat16 if run_cfg.param_dtype == "bfloat16" else jnp.float32
+    sizes = pm.mesh_axis_sizes(mesh)
+    mod = api.get_module(cfg)
+
+    if shape.mode == "train":
+        if parallel_baseline:
+            return _train_parallel_case(cfg, run_cfg, shape, mesh, policy,
+                                        dtype, sizes)
+        return _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype,
+                                 sizes, h or run_cfg.h_base)
+    if shape.mode == "prefill":
+        return _prefill_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes)
+    return _decode_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes,
+                        long=(shape.mode == "long_decode"))
+
+
+# --------------------------------------------------------------------------
+# Training cases
+# --------------------------------------------------------------------------
+
+def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h):
+    w = pm.worker_count(policy, mesh)
+    waxes = pm.worker_mesh_axes(policy, mesh)
+    waxes = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
+    assert shape.global_batch % max(w, 1) == 0, (shape.global_batch, w)
+    b_loc = shape.global_batch // max(w, 1)
+    inner_data = "data" if policy == "fsdp" and _div(b_loc, sizes.get("data", 1)) else None
+
+    state = _abstract_state(cfg, run_cfg, w, dtype)
+    batches = _batch_abstract(cfg, (h, w, b_loc), shape.seq_len)
+    lrs = SDS((h,), jnp.float32)
+
+    sspec = _state_specs(cfg, run_cfg, policy, mesh)
+    bspec = _batch_specs(cfg, 1, waxes, inner_data)
+
+    round_fn = LU.make_train_round(cfg, run_cfg)
+    in_sh = (_ns(mesh, sspec), _ns(mesh, bspec), NamedSharding(mesh, P()))
+    out_sh = (_ns(mesh, sspec), NamedSharding(mesh, P()))
+    return Case(round_fn, (state, batches, lrs), in_sh, out_sh,
+                meta={"cfg": cfg, "w": w, "b_loc": b_loc, "h": h,
+                      "fn_name": "train_round", "steps_per_program": h})
+
+
+def _train_parallel_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes):
+    """Paper baseline ②: grad all-reduce every step (no worker axis)."""
+    mod = api.get_module(cfg)
+    defs = mod.param_defs(cfg)
+    pabs = pm.abstract_params(defs, dtype)
+    f32 = lambda s: SDS(s.shape, jnp.float32)
+    if run_cfg.optimizer == "sgd":
+        opt = {"mu": jax.tree.map(f32, pabs), "step": SDS((), jnp.int32)}
+    else:
+        opt = {"m": jax.tree.map(f32, pabs), "v": jax.tree.map(f32, pabs),
+               "step": SDS((), jnp.int32)}
+    state = {"params": pabs, "opt": opt}
+    pspec = pm.param_specs(defs, policy, mesh)  # no worker axis
+    sspec = {"params": pspec,
+             "opt": ({"mu": pspec, "step": P()} if run_cfg.optimizer == "sgd"
+                     else {"m": pspec, "v": pspec, "step": P()})}
+
+    # batch over all data-parallel axes
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    baxes_s = baxes if len(baxes) > 1 else baxes[0]
+    batch = _batch_abstract(cfg, (shape.global_batch,), shape.seq_len)
+    bspec = {k: P(*((baxes_s,) + (None,) * (len(v.shape) - 1)))
+             for k, v in batch.items()}
+
+    step_fn = LU.make_parallel_step(cfg, run_cfg)
+    in_sh = (_ns(mesh, sspec), _ns(mesh, bspec), None)
+    out_sh = (_ns(mesh, sspec), NamedSharding(mesh, P()))
+    lr = SDS((), jnp.float32)
+    return Case(step_fn, (state, batch, lr), in_sh, out_sh,
+                meta={"cfg": cfg, "w": 1, "b_loc": shape.global_batch, "h": 1,
+                      "fn_name": "parallel_step", "steps_per_program": 1})
+
+
+# --------------------------------------------------------------------------
+# Serving cases
+# --------------------------------------------------------------------------
+
+def _serve_param_setup(cfg, mesh, policy, dtype):
+    mod = api.get_module(cfg)
+    defs = mod.param_defs(cfg)
+    pabs = pm.abstract_params(defs, dtype)
+    pspec = pm.param_specs(defs, policy, mesh)
+    return mod, pabs, pspec
+
+
+def _cache_sharding(cfg, cache_abs, mesh, sizes, batch, *,
+                    layout: str = "batch"):
+    """Shard caches.
+
+    layout="batch":     batch dim over (pod,data) when divisible, else the
+                        sequence dim over data (context-parallel long decode).
+    layout="seq_model": additionally shard the KV-cache *sequence* dim over
+                        'model' (flash-decode): attention reduces over the
+                        sharded seq with a tiny per-layer psum, and no tensor
+                        ever needs kv-head sharding — so GSPMD never reshards
+                        the scan-carried cache (§Perf pair 2).
+    """
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    nb = math.prod(sizes[a] for a in baxes)
+    baxes_s = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def one(sds):
+        shp = sds.shape
+        # find the batch dim: first dim equal to `batch` after the layer dim
+        dims: list[Any] = [None] * len(shp)
+        bdim = None
+        for i, d in enumerate(shp):
+            if d == batch and i > 0:
+                bdim = i
+                break
+        if bdim is None and len(shp) >= 2 and shp[0] == batch:
+            bdim = 0
+        if bdim is not None and _div(batch, nb):
+            dims[bdim] = baxes_s
+        elif bdim is not None and len(shp) > bdim + 1 and \
+                _div(shp[bdim + 1], sizes.get("data", 1)) and shp[bdim + 1] > 1024:
+            dims[bdim + 1] = "data"  # context-parallel: shard the seq dim
+        if (layout == "seq_model" and bdim is not None and len(shp) == 5
+                and len(shp) > bdim + 1
+                and _div(shp[bdim + 1], sizes.get("model", 1))
+                and shp[bdim + 1] > 1024):
+            dims[bdim + 1] = "model"   # KV seq dim, [L,B,S,kv,hd]
+        return P(*dims)
+
+    return jax.tree.map(one, cache_abs)
+
+
+def _prefill_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes):
+    mod, pabs, pspec = _serve_param_setup(cfg, mesh, policy, dtype)
+    b, s = shape.global_batch, shape.seq_len
+    max_len = s + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    cache = mod.cache_spec(cfg, b, max_len, dtype)
+    cache_spec_tree = _cache_sharding(cfg, cache, mesh, sizes, b,
+                                      layout=getattr(run_cfg, "cache_layout",
+                                                     "batch"))
+
+    tokens = SDS((b, s), jnp.int32)
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    nb = math.prod(sizes[a] for a in baxes)
+    baxes_s = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    tok_spec = P(baxes_s, None) if _div(b, nb) else P(None, None)
+
+    kwargs_abs, kwargs_spec = {}, {}
+    if cfg.family == "vlm":
+        kwargs_abs["prefix_embeds"] = SDS((b, cfg.n_img_tokens, cfg.d_model), dtype)
+        kwargs_spec["prefix_embeds"] = P(tok_spec[0], None, None)
+    if cfg.family == "audio":
+        kwargs_abs["frames"] = SDS((b, cfg.enc_seq, cfg.d_model), dtype)
+        kwargs_spec["frames"] = P(tok_spec[0], None, None)
+
+    def fn(params, tokens, cache, kw):
+        return mod.prefill(cfg, params, tokens, cache, **kw)
+
+    in_sh = (_ns(mesh, pspec), NamedSharding(mesh, tok_spec),
+             _ns(mesh, cache_spec_tree), _ns(mesh, kwargs_spec))
+    out_sh = (NamedSharding(mesh, P(tok_spec[0], None)),
+              _ns(mesh, cache_spec_tree))
+    return Case(fn, (pabs, tokens, cache, kwargs_abs), in_sh, out_sh,
+                meta={"cfg": cfg, "fn_name": "prefill", "steps_per_program": 1,
+                      "tokens_per_program": b * s})
+
+
+def _decode_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, *, long):
+    mod, pabs, pspec = _serve_param_setup(cfg, mesh, policy, dtype)
+    b, s = shape.global_batch, shape.seq_len
+    override = cfg.long_decode_window if (long and cfg.family not in
+                                          ("ssm",)) else 0
+    cache = mod.cache_spec(cfg, b, s, dtype, window_override=override)
+    cache_spec_tree = _cache_sharding(cfg, cache, mesh, sizes, b,
+                                      layout=getattr(run_cfg, "cache_layout",
+                                                     "batch"))
+
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    nb = math.prod(sizes[a] for a in baxes)
+    baxes_s = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    tok_spec = P(baxes_s) if _div(b, nb) else P(None)
+
+    token = SDS((b,), jnp.int32)
+    pos = SDS((), jnp.int32)
+    if "k" in cache:
+        kv_len = cache["k"].shape[2]
+    elif "attn_k" in cache:
+        kv_len = cache["attn_k"].shape[2]
+    else:
+        kv_len = 0  # pure SSM: O(1) state
+    ring = bool(override) and bool(kv_len) and kv_len < s
+    prefix_len = cfg.n_img_tokens if cfg.family == "vlm" else 0
+
+    def fn(params, token, cache, pos):
+        return mod.decode_step(cfg, params, token, cache, pos,
+                               prefix_len=prefix_len, ring=ring)
+
+    in_sh = (_ns(mesh, pspec), NamedSharding(mesh, tok_spec),
+             _ns(mesh, cache_spec_tree), None)
+    out_sh = (NamedSharding(mesh, P(tok_spec[0], None)),
+              _ns(mesh, cache_spec_tree))
+    return Case(fn, (pabs, token, cache, pos), in_sh, out_sh,
+                meta={"cfg": cfg, "fn_name": "decode_step",
+                      "steps_per_program": 1, "ring": ring,
+                      "kv_len": kv_len, "tokens_per_program": b})
+
+
+# --------------------------------------------------------------------------
+# Cost-calibration support.
+#
+# XLA's cost_analysis() counts a while-loop body ONCE (verified in
+# EXPERIMENTS.md §Dry-run), and fully unrolling production depths does not
+# compile in reasonable time.  So the roofline pass compiles each program at
+# two reduced depths with every scan UNROLLED (exact HLO costs), fits
+# cost(L) = a*L + b, and extrapolates to the full depth.  The full-depth
+# scan-mode compile still provides the lowering proof + memory analysis.
+# --------------------------------------------------------------------------
+
+def calib_sizes(cfg) -> tuple[int, int, float]:
+    """(L1, L2, full_layers): reduced depths preserving the layer pattern.
+    All three are in LAYERS; the extrapolation in roofline_run divides by L1
+    to fit per-pattern-block costs."""
+    if cfg.family == "hybrid":  # zamba2: block = one shared-attn group
+        p = cfg.shared_attn_period
+        return p, 2 * p, float(cfg.n_layers)
+    if cfg.window_pattern > 0:  # gemma3: preserve the local:global pattern
+        p = cfg.window_pattern
+        return p, 2 * p, float(cfg.n_layers)
+    return 2, 4, float(cfg.n_layers)
+
+
+def with_depth(cfg, n_layers: int):
+    kw = {"n_layers": n_layers}
+    if cfg.family == "audio":
+        kw["n_enc_layers"] = max(1, round(cfg.n_enc_layers * n_layers / cfg.n_layers))
+    return dataclasses.replace(cfg, **kw)
+
+
+def build_calib_case(cfg, shape_name: str, mesh, *, policy: str,
+                     run_cfg: RunConfig | None = None, fn_kind: str) -> Case:
+    """Like build_case but for an explicitly-resized cfg and a specific
+    sub-program: local_step | sync | parallel_step | prefill | decode."""
+    shape = SHAPES[shape_name]
+    run_cfg = run_cfg or RunConfig(sharding=policy)
+    dtype = jnp.bfloat16 if run_cfg.param_dtype == "bfloat16" else jnp.float32
+    sizes = pm.mesh_axis_sizes(mesh)
+
+    if fn_kind in ("local_step", "sync"):
+        w = pm.worker_count(policy, mesh)
+        waxes = pm.worker_mesh_axes(policy, mesh)
+        waxes = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
+        b_loc = shape.global_batch // max(w, 1)
+        inner_data = ("data" if policy == "fsdp"
+                      and _div(b_loc, sizes.get("data", 1)) else None)
+        state = _abstract_state(cfg, run_cfg, w, dtype)
+        sspec = _state_specs(cfg, run_cfg, policy, mesh)
+        if fn_kind == "sync":
+            from repro.core.sync import make_sync
+            sync = make_sync(run_cfg)
+            in_sh = (_ns(mesh, sspec),)
+            return Case(sync, (state,), in_sh, _ns(mesh, sspec),
+                        meta={"cfg": cfg, "fn_name": "sync", "w": w})
+        batch = _batch_abstract(cfg, (w, b_loc), shape.seq_len)
+        bspec = _batch_specs(cfg, 0, waxes, inner_data)
+        step = LU.make_local_step(cfg, run_cfg)
+        in_sh = (_ns(mesh, sspec), _ns(mesh, bspec), None)
+        out_sh = (_ns(mesh, sspec), NamedSharding(mesh, P()))
+        lr = SDS((), jnp.float32)
+        return Case(step, (state, batch, lr), in_sh, out_sh,
+                    meta={"cfg": cfg, "fn_name": "local_step", "w": w,
+                          "b_loc": b_loc})
+    if fn_kind == "parallel_step":
+        return _train_parallel_case(cfg, run_cfg, shape, mesh, policy, dtype,
+                                    sizes)
+    if fn_kind == "prefill":
+        return _prefill_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes)
+    if fn_kind == "decode":
+        return _decode_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes,
+                            long=(shape.mode == "long_decode"))
+    raise ValueError(fn_kind)

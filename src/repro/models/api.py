@@ -1,0 +1,38 @@
+"""Uniform model protocol: family -> module dispatch.
+
+Every module exposes:
+  param_defs(cfg) -> ParamDef tree
+  loss_fn(cfg, params, batch, *, remat) -> scalar loss
+  forward(cfg, params, ...) -> (logits, aux)
+  cache_spec / init_cache / prefill / decode_step   (decoder families)
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2, transformer, vit, whisper, zamba2
+
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,          # cfg.n_experts drives the MoE FFN
+    "vlm": transformer,          # prefix_embeds in the batch
+    "ssm": mamba2,
+    "hybrid": zamba2,
+    "audio": whisper,
+    "vision": vit,
+}
+
+
+def get_module(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def batch_keys(cfg: ModelConfig) -> tuple[str, ...]:
+    """Input tensors a training batch must contain (besides labels)."""
+    if cfg.family == "vlm":
+        return ("tokens", "prefix_embeds")
+    if cfg.family == "audio":
+        return ("tokens", "frames")
+    if cfg.family == "vision":
+        return ("images",)
+    return ("tokens",)

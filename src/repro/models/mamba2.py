@@ -1,0 +1,249 @@
+"""Mamba2 — SSD (state-space duality), arXiv:2405.21060.
+
+Chunked SSD: intra-chunk contributions are a masked quadratic form (dense,
+MXU-friendly), inter-chunk contributions flow through a `lax.scan` state
+recurrence — depth- and length-scalable, O(S·Q) instead of O(S^2).
+Decode is a single state update per token: the sub-quadratic path used by
+the `long_500k` input shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import common as cm
+from repro.models.param import ParamDef
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def mixer_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, h, conv_dim = dims(cfg)
+    return {
+        "wz": ParamDef((d, d_inner), ("embed", "mlp")),
+        "wxBC": ParamDef((d, conv_dim), ("embed", "conv_dim")),
+        "wdt": ParamDef((d, h), ("embed", "heads")),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_dim), (None, "conv_dim")),
+        "conv_b": ParamDef((conv_dim,), ("conv_dim",), "zeros"),
+        "A_log": ParamDef((h,), ("heads",), "ones"),
+        "dt_bias": ParamDef((h,), ("heads",), "zeros"),
+        "D": ParamDef((h,), ("heads",), "ones"),
+        "norm": ParamDef((d_inner,), ("mlp",), "ones"),
+        "wout": ParamDef((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x [B,S,C], w [K,C]."""
+    k, c = w.shape
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype), window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=c)
+    return out + b.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B_, C_, D, chunk: int, initial_state=None):
+    """SSD over a full sequence.
+
+    x [B,S,H,P]; dt [B,S,H] (>0); A [H] (<0); B_,C_ [B,S,N]; D [H].
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    f32 = jnp.float32
+
+    xc = x.reshape(b, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, q, h).astype(f32)
+    Bc = B_.reshape(b, nc, q, n).astype(f32)
+    Cc = C_.reshape(b, nc, q, n).astype(f32)
+    a = dtc * A.astype(f32)                            # [B,nc,Q,H], negative
+    cum = jnp.cumsum(a, axis=2)                        # running log-decay
+
+    # ---- intra-chunk: masked quadratic form ----
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,Qi,Qj,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)       # [B,nc,Q,Q]
+    M = scores[..., None] * L * dtc[:, :, None, :, :]    # weight by dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # ---- chunk-final states ----
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)           # [B,nc,Q,H]
+    s_c = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", dec_end * dtc, xc, Bc)
+    chunk_dec = jnp.exp(cum[:, :, -1, :])                # [B,nc,H]
+
+    # ---- inter-chunk recurrence ----
+    h0 = (jnp.zeros((b, h, p, n), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(hprev, inp):
+        sc, dec = inp                                    # [B,H,P,N], [B,H]
+        hnew = hprev * dec[:, :, None, None] + sc
+        return hnew, hprev
+
+    s_cT = jnp.moveaxis(s_c, 1, 0)                       # [nc,B,H,P,N]
+    decT = jnp.moveaxis(chunk_dec, 1, 0)                 # [nc,B,H]
+    h_last, h_in = jax.lax.scan(step, h0, (s_cT, decT),
+                                unroll=cm.scan_unroll())
+    h_in = jnp.moveaxis(h_in, 0, 1)                      # state entering chunk
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, h_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), h_last
+
+
+def mixer_apply(cfg: ModelConfig, p: dict, u: jax.Array, *,
+                cache: dict | None = None, initial_state=None):
+    """u [B,S,d_model] -> (out, new_cache | final_state).
+
+    cache (decode): {"conv": [B,K-1,Cd], "ssm": [B,H,P,N]} — S must be 1.
+    """
+    b, s, _ = u.shape
+    d_inner, h, conv_dim = dims(cfg)
+    n, pdim = cfg.ssm_state, cfg.ssm_headdim
+    z = u @ p["wz"]
+    xBC = u @ p["wxBC"]
+    dt_raw = u @ p["wdt"] + p["dt_bias"].astype(u.dtype)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    new_cache = None
+    if cache is not None:
+        window = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC], axis=1)
+        conv_out = (jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                               p["conv_w"].astype(jnp.float32))
+                    + p["conv_b"].astype(jnp.float32))[:, None]
+        xBC_c = jax.nn.silu(conv_out).astype(u.dtype)
+        xs = xBC_c[..., :d_inner].reshape(b, 1, h, pdim)
+        B_ = xBC_c[..., d_inner:d_inner + n]
+        C_ = xBC_c[..., d_inner + n:]
+        # single-step state update
+        hs = cache["ssm"].astype(jnp.float32)            # [B,H,P,N]
+        dec = jnp.exp(dt[:, 0, :] * A[None])             # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0, :], xs[:, 0].astype(jnp.float32),
+                         B_[:, 0].astype(jnp.float32))
+        hs = hs * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", C_[:, 0].astype(jnp.float32), hs)
+        y = y + xs[:, 0].astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+        y = y.reshape(b, 1, d_inner).astype(u.dtype)
+        new_cache = {"conv": window[:, 1:], "ssm": hs}
+    else:
+        xBC_c = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        xs = xBC_c[..., :d_inner].reshape(b, s, h, pdim)
+        B_ = xBC_c[..., d_inner:d_inner + n]
+        C_ = xBC_c[..., d_inner + n:]
+        y, final = ssd_chunked(xs, dt, A, B_, C_, p["D"], cfg.ssm_chunk,
+                               initial_state=initial_state)
+        y = y.reshape(b, s, d_inner)
+        new_cache = {"conv": xBC[:, -(cfg.ssm_conv - 1):, :], "ssm": final}
+
+    y = kops.rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["wout"], new_cache
+
+
+# --------------------------------------------------------------------------
+# Full mamba2 LM
+# --------------------------------------------------------------------------
+
+def _layer_defs(cfg: ModelConfig) -> dict:
+    return {"ln": cm.norm_defs(cfg), "mixer": mixer_defs(cfg)}
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": cm.embed_defs(cfg),
+        "layers": cm.stack_defs(_layer_defs(cfg), cfg.n_layers),
+        "final_norm": cm.norm_defs(cfg),
+    }
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            remat: bool = True, prefix_embeds=None):
+    h = cm.embed_apply(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+
+    def body(hh, lp):
+        out, _ = mixer_apply(cfg, lp["mixer"], cm.norm_apply(cfg, lp["ln"], hh))
+        return hh + out, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["layers"], unroll=cm.scan_unroll())
+    h = cm.norm_apply(cfg, params["final_norm"], h)
+    if prefix_embeds is not None:
+        h = h[:, prefix_embeds.shape[1]:]
+    return cm.unembed_apply(cfg, params["embed"], h), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, remat=True):
+    logits, _ = forward(cfg, params, batch["tokens"], remat=remat)
+    return cm.lm_loss(logits, batch["labels"])
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               window_override: int = 0):
+    del max_len, window_override  # state size is O(1) in sequence length
+    d_inner, h, conv_dim = dims(cfg)
+    l = cfg.n_layers
+    return {
+        "conv": jax.ShapeDtypeStruct((l, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jax.ShapeDtypeStruct((l, batch, h, cfg.ssm_headdim, cfg.ssm_state),
+                                    jnp.float32),
+    }
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16, window_override=0):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        cache_spec(cfg, batch, max_len, dtype, window_override))
+
+
+def _scan_cached(cfg, params, h, cache):
+    def body(hh, xs):
+        lp, cc, cs = xs
+        out, nc = mixer_apply(cfg, lp["mixer"], cm.norm_apply(cfg, lp["ln"], hh),
+                              cache={"conv": cc, "ssm": cs})
+        return hh + out, (nc["conv"], nc["ssm"])
+
+    h, (nconv, nssm) = jax.lax.scan(
+        body, h, (params["layers"], cache["conv"], cache["ssm"]),
+        unroll=cm.scan_unroll())
+    return h, {"conv": nconv, "ssm": nssm}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict,
+            **_):
+    """Full-sequence prefill; cache becomes the post-prompt SSM/conv state."""
+    h = cm.embed_apply(cfg, params["embed"], tokens)
+
+    def body(hh, lp):
+        out, nc = mixer_apply(cfg, lp["mixer"], cm.norm_apply(cfg, lp["ln"], hh))
+        return hh + out, (nc["conv"].astype(cache["conv"].dtype), nc["ssm"])
+
+    h, (nconv, nssm) = jax.lax.scan(body, h, params["layers"],
+                                    unroll=cm.scan_unroll())
+    h = cm.norm_apply(cfg, params["final_norm"], h[:, -1:])
+    logits = cm.unembed_apply(cfg, params["embed"], h)[:, 0]
+    return logits, {"conv": nconv, "ssm": nssm}
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, cache: dict,
+                pos, *, prefix_len: int = 0, ring: bool = False):
+    del pos, prefix_len, ring  # state carries all history
+    h = cm.embed_apply(cfg, params["embed"], token[:, None])
+    h, cache = _scan_cached(cfg, params, h, cache)
+    h = cm.norm_apply(cfg, params["final_norm"], h)
+    return cm.unembed_apply(cfg, params["embed"], h)[:, 0], cache

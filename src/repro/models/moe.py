@@ -1,0 +1,256 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded dispatch.
+
+Dispatch is sort-based (argsort by expert id + scatter into an [E, C, d]
+capacity buffer) rather than the GShard one-hot einsum: for kimi-k2's 384
+experts the one-hot dispatch tensor would be ~40x larger than the buffer.
+The expert axis is sharded over the `data` mesh axis (expert parallelism);
+the token->expert scatter therefore lowers to an all-to-all in the HLO.
+
+Covers dbrx-132b (16e top-4) and kimi-k2 (384e top-8 + 1 shared expert).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.param import ParamDef
+
+# Expert-parallel dispatch granularity (set by the runtime, see
+# core.local_update.make_loss): 1 = global argsort dispatch; n>1 = shard-
+# local dispatch with per-shard capacity — the only cross-shard movement is
+# the token->expert all-to-all (GSPMD-friendly; §Perf pair 1).
+_DISPATCH_SHARDS = 1
+_DISPATCH_MODE = "auto"       # auto | global | sharded | shard_map
+_DISPATCH_MESH = None         # Mesh for the shard_map path
+
+
+def set_dispatch_shards(n: int) -> None:
+    global _DISPATCH_SHARDS
+    _DISPATCH_SHARDS = max(1, int(n))
+
+
+def set_dispatch(mode: str = "auto", mesh=None) -> None:
+    global _DISPATCH_MODE, _DISPATCH_MESH
+    _DISPATCH_MODE = mode
+    _DISPATCH_MESH = mesh
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    defs = {
+        "router": ParamDef((d, e), ("embed", None)),
+        "wi": ParamDef((e, d, f), ("experts", "embed", "mlp")),
+        "wg": ParamDef((e, d, f), ("experts", "embed", "mlp")),
+        "wo": ParamDef((e, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = cm.mlp_defs(cfg, d_ff=cfg.d_ff * cfg.n_shared_experts)
+    return defs
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # pad to a multiple of 8
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x [B,S,d] -> (out [B,S,d], aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    if _DISPATCH_MODE == "shard_map" and _DISPATCH_MESH is not None:
+        return _moe_apply_shard_map(cfg, p, x, _DISPATCH_MESH)
+    if _DISPATCH_SHARDS > 1 and t % _DISPATCH_SHARDS == 0:
+        return _moe_apply_sharded(cfg, p, x, _DISPATCH_SHARDS)
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # [T,E]
+    top_p, top_i = jax.lax.top_k(probs, k)                      # [T,k]
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)           # renormalize
+
+    # ---- load-balance aux loss (Switch/GShard style) ----
+    me = jnp.mean(probs, axis=0)                                # mean router prob
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=1), axis=0
+    ) / k                                                       # token fraction
+    aux = e * jnp.sum(me * ce)
+
+    # ---- sort-based capacity dispatch ----
+    c = capacity(cfg, t)
+    flat_e = top_i.reshape(-1)                                  # [T*k]
+    order = jnp.argsort(flat_e)                                 # stable
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))       # [E]
+    pos_in_e = jnp.arange(t * k) - seg_start[sorted_e]
+    keep = pos_in_e < c
+    pos_cl = jnp.minimum(pos_in_e, c - 1)
+    tok_of_slot = order // k                                    # [T*k]
+
+    src = xf[tok_of_slot] * keep[:, None].astype(xf.dtype)
+    buf = jnp.zeros((e, c, d), xf.dtype).at[sorted_e, pos_cl].add(src)
+
+    # ---- expert computation (sharded over the expert axis) ----
+    hg = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    hi = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    hout = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * hi, p["wo"])
+
+    # ---- combine: gather back, weight by router prob ----
+    gathered = hout[sorted_e, pos_cl] * keep[:, None].astype(hout.dtype)
+    inv = jnp.argsort(order)
+    per_slot = gathered[inv].reshape(t, k, d)
+    out = jnp.sum(per_slot * top_p[..., None].astype(per_slot.dtype), axis=1)
+
+    if cfg.n_shared_experts:
+        out = out + cm.mlp_apply(cfg, p["shared"], xf)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_apply_sharded(cfg: ModelConfig, p: dict, x: jax.Array, shards: int):
+    """Shard-local dispatch: top-k, argsort and the capacity buffer are all
+    computed per data shard (every op carries the leading shard dim, so GSPMD
+    never materializes a global token-slot tensor); the expert einsum then
+    contracts against 'data'-sharded expert weights, which lowers to one
+    all-to-all per layer instead of global all-gathers."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    tl = t // shards
+    xs = x.reshape(shards, tl, d)
+    try:
+        from jax.sharding import PartitionSpec as P
+        xs = jax.lax.with_sharding_constraint(xs, P("data", None, None))
+    except Exception:
+        pass  # no mesh in scope (CPU smoke tests)
+
+    logits = xs.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # [S?,tl,E]
+    top_p, top_i = jax.lax.top_k(probs, k)                   # [sh,tl,k]
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32),
+                          axis=2), axis=(0, 1)) / k
+    aux = e * jnp.sum(me * ce)
+
+    c = capacity(cfg, tl)                                    # per-shard cap
+    flat_e = top_i.reshape(shards, tl * k)
+    order = jnp.argsort(flat_e, axis=1)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    seg_start = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(
+        sorted_e)                                            # [sh,E]
+    pos_in_e = jnp.arange(tl * k)[None] - jnp.take_along_axis(
+        seg_start, sorted_e, axis=1)
+    keep = pos_in_e < c
+    pos_cl = jnp.minimum(pos_in_e, c - 1)
+    tok = order // k                                         # [sh,tl*k]
+
+    src = jnp.take_along_axis(
+        xs, jnp.broadcast_to(tok[..., None], (shards, tl * k, d)), axis=1)
+    src = src * keep[..., None].astype(src.dtype)
+    sh_ix = jnp.arange(shards)[:, None]
+    buf = jnp.zeros((shards, e, c, d), xs.dtype).at[
+        sh_ix, sorted_e, pos_cl].add(src)
+
+    # expert compute: weights are 'data'-sharded on E -> all-to-all here
+    hg = jnp.einsum("xecd,edf->xecf", buf, p["wg"])
+    hi = jnp.einsum("xecd,edf->xecf", buf, p["wi"])
+    hout = jnp.einsum("xecf,efd->xecd", jax.nn.silu(hg) * hi, p["wo"])
+
+    gathered = hout[sh_ix, sorted_e, pos_cl]                 # [sh,tl*k,d]
+    gathered = gathered * keep[..., None].astype(hout.dtype)
+    inv = jnp.argsort(order, axis=1)
+    per_slot = jnp.take_along_axis(
+        gathered, jnp.broadcast_to(inv[..., None], gathered.shape), axis=1)
+    per_slot = per_slot.reshape(shards, tl, k, d)
+    out = jnp.sum(per_slot * top_p[..., None].astype(per_slot.dtype), axis=2)
+
+    if cfg.n_shared_experts:
+        out = out + cm.mlp_apply(cfg, p["shared"], xs.reshape(shards * tl, d)
+                                 ).reshape(shards, tl, d)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _local_dispatch_compute(cfg, xl, router, wil, wgl, wol, *, n_data: int):
+    """Per-shard body of the shard_map dispatch: local top-k + capacity
+    buffer, all_to_all to expert owners, local expert matmuls (f-dim sharded
+    over 'model' -> psum), all_to_all back, local combine."""
+    e, k = cfg.n_experts, cfg.top_k
+    tl, d = xl.shape
+    logits = xl.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32),
+                          axis=1), axis=0) / k
+    # per-shard load-balance statistics, averaged outside the shard_map — a
+    # different (equally valid) estimator than the global-batch aux loss;
+    # they agree in expectation but not per step.
+    aux = e * jnp.sum(me * ce)
+
+    c = capacity(cfg, tl)
+    flat = top_i.reshape(-1)
+    order = jnp.argsort(flat)
+    se = flat[order]
+    seg = jnp.searchsorted(se, jnp.arange(e))
+    pos = jnp.arange(tl * k) - seg[se]
+    keep = pos < c
+    posc = jnp.minimum(pos, c - 1)
+    tok = order // k
+    src = xl[tok] * keep[:, None].astype(xl.dtype)
+    buf = jnp.zeros((e, c, d), xl.dtype).at[se, posc].add(src)
+
+    buf2 = jax.lax.all_to_all(buf, "data", split_axis=0, concat_axis=1,
+                              tiled=True)                  # [E/na, na*C, d]
+    # f-dim stays sharded over the AUTO 'model' axis: GSPMD partitions the
+    # expert matmuls and inserts the f-contraction psum itself.
+    hg = jnp.einsum("ecd,edf->ecf", buf2, wgl)
+    hi = jnp.einsum("ecd,edf->ecf", buf2, wil)
+    hout = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * hi, wol)
+    back = jax.lax.all_to_all(hout, "data", split_axis=1, concat_axis=0,
+                              tiled=True)                  # [E, C, d]
+
+    gathered = back[se, posc] * keep[:, None].astype(back.dtype)
+    inv = jnp.argsort(order)
+    per_slot = gathered[inv].reshape(tl, k, d)
+    out = jnp.sum(per_slot * top_p[..., None].astype(per_slot.dtype), axis=1)
+    return out, aux
+
+
+def _moe_apply_shard_map(cfg: ModelConfig, p: dict, x: jax.Array, mesh):
+    """Expert-parallel dispatch as an explicit shard_map: deterministic
+    all_to_all instead of GSPMD-inferred collectives (§Perf pair 1 it4)."""
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    n_data = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+    xf = x.reshape(b * s, d)
+
+    def body(xl, router, wil, wgl, wol):
+        return _local_dispatch_compute(cfg, xl, router, wil, wgl, wol,
+                                       n_data=n_data)
+
+    # manual over 'data' only (the all_to_all axis); 'model' and 'pod'
+    # (the worker vmap dim) stay automatic under GSPMD
+    def body2(*a):
+        out, aux = body(*a)
+        return out, aux[None]  # [1] per shard -> gathered over 'data'
+
+    fn = jax.shard_map(
+        body2, mesh=mesh, axis_names={"data"},
+        in_specs=(P("data", None), P(None, None),
+                  P("data", None, None), P("data", None, None),
+                  P("data", None, None)),
+        out_specs=(P("data", None), P("data")),
+        check_vma=False)
+    out, aux_sh = fn(xf, p["router"], p["wi"], p["wg"], p["wo"])
+    aux = jnp.mean(aux_sh)
+    out = out.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        out = out + cm.mlp_apply(cfg, p["shared"], x)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,177 @@
+"""Declarative parameter definitions.
+
+Every model module describes its parameters once, as a nested dict of
+``ParamDef(shape, logical_axes, init)``.  From that single description we derive:
+
+  * ``init_params``      — materialized pytree (PRNG-seeded),
+  * ``abstract_params``  — ShapeDtypeStruct pytree (for ``eval_shape``/dry-run),
+  * ``param_specs``      — pytree of ``jax.sharding.PartitionSpec`` produced by
+                           mapping *logical* axis names onto mesh axes under a
+                           sharding policy (with per-tensor conflict resolution
+                           and divisibility checks).
+
+Logical axis vocabulary (see DESIGN.md §2):
+  worker   — local-gradient replica axis (leading axis added by the runtime)
+  layers   — scan-stacked layer axis (never sharded)
+  embed    — d_model dim (sharded over the fsdp axis under the `fsdp` policy)
+  mlp      — ffn hidden dim            -> 'model'
+  heads    — attention q-head dim      -> 'model'
+  kv       — kv-head dim               -> 'model' (replicated if not divisible)
+  vocab    — vocabulary dim            -> 'model' (replicated if not divisible)
+  experts  — MoE expert dim            -> expert-parallel axis
+  (None)   — replicated dim
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | embed | scaled(fan_in)
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(rng: jax.Array, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "embed":
+        return (jax.random.normal(rng, d.shape) * d.scale).astype(dtype)
+    if d.init == "normal":
+        # fan-in scaled truncated-normal-ish init (lecun normal)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(rng, d.shape) * std).astype(dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs: Pytree, rng: jax.Array, dtype=jnp.float32) -> Pytree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    rngs = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_leaf_init(r, d, dtype) for r, d in zip(rngs, leaves)]
+    )
+
+
+def abstract_params(defs: Pytree, dtype=jnp.float32) -> Pytree:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def
+    )
+
+
+# --------------------------------------------------------------------------
+# Logical-axis -> mesh-axis rules.
+# --------------------------------------------------------------------------
+
+# Ordered: earlier entries claim mesh axes first within each tensor.
+_POLICY_RULES: dict[str, list[tuple[str, tuple[str, ...]]]] = {
+    # One model replica per *data rank*; tensor-parallel over 'model'.
+    "dp": [
+        ("worker", ("pod", "data")),
+        ("experts", ("data",)),   # dp MoE models still expert-shard if possible
+        ("vocab", ("model",)),
+        ("heads", ("model",)),
+        ("kv", ("model",)),
+        ("mlp", ("model",)),
+        ("conv_dim", ("model",)),
+    ],
+    # One replica per *pod*; params fully sharded inside the pod (FSDP+TP+EP).
+    "fsdp": [
+        ("worker", ("pod",)),
+        ("experts", ("data",)),
+        ("vocab", ("model",)),
+        ("heads", ("model",)),
+        ("kv", ("model",)),
+        ("mlp", ("model",)),
+        ("conv_dim", ("model",)),
+        ("embed", ("data",)),
+    ],
+}
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(axes: tuple[str | None, ...], shape: tuple[int, ...],
+             policy: str, mesh) -> P:
+    """Map logical axes of one tensor to a PartitionSpec under `policy`.
+
+    Skips a mapping when (a) the mesh axis is absent, (b) the dim is not
+    divisible by the mesh-axis size, or (c) the mesh axis was already claimed
+    by a higher-priority logical axis of this same tensor.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    rules = dict(_POLICY_RULES[policy])
+    used: set[str] = set()
+    out: list[Any] = []
+    for dim, ax in zip(shape, axes):
+        target = rules.get(ax) if ax is not None else None
+        if target is None:
+            out.append(None)
+            continue
+        avail = tuple(a for a in target if a in sizes and a not in used)
+        total = math.prod(sizes[a] for a in avail) if avail else 1
+        if avail and total > 1 and dim % total == 0:
+            used.update(avail)
+            out.append(avail if len(avail) > 1 else avail[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_specs(defs: Pytree, policy: str, mesh,
+                extra_leading: tuple[str | None, ...] = ()) -> Pytree:
+    """Specs for a defs tree; `extra_leading` prepends logical axes (e.g. the
+    worker axis the local-gradient runtime adds)."""
+
+    def one(d: ParamDef) -> P:
+        axes = tuple(extra_leading) + d.axes
+        shape = (0,) * len(extra_leading) + d.shape  # shape only used for div-check
+        # leading worker axis: divisibility checked by caller (W is chosen to match)
+        sizes = mesh_axis_sizes(mesh)
+        rules = dict(_POLICY_RULES[policy])
+        full_shape = list(shape)
+        for i, ax in enumerate(extra_leading):
+            if ax == "worker":
+                tgt = rules.get("worker", ())
+                full_shape[i] = math.prod(sizes.get(a, 1) for a in tgt)
+        return spec_for(axes, tuple(full_shape), policy, mesh)
+
+    return jax.tree.map(one, defs, is_leaf=is_def)
+
+
+def worker_count(policy: str, mesh) -> int:
+    """Number of local-gradient workers (divergent replicas) for a policy/mesh."""
+    sizes = mesh_axis_sizes(mesh)
+    axes = dict(_POLICY_RULES[policy])["worker"]
+    return math.prod(sizes.get(a, 1) for a in axes)
+
+
+def worker_mesh_axes(policy: str, mesh) -> tuple[str, ...]:
+    sizes = mesh_axis_sizes(mesh)
+    return tuple(a for a in dict(_POLICY_RULES[policy])["worker"] if a in sizes)
+
+
+def count_params(defs: Pytree) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(math.prod(d.shape) for d in leaves)

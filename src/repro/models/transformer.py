@@ -1,0 +1,190 @@
+"""Decoder-only transformer LM (dense + MoE + prefix-LM variants).
+
+Covers: starcoder2-3b, gemma3-4b, qwen1.5-110b, phi3-medium-14b (dense),
+dbrx-132b, kimi-k2-1t (MoE, via cfg.n_experts), paligemma-3b (prefix-LM over
+stub image embeddings).  Layers are `lax.scan`-stacked so HLO size is
+depth-independent; per-layer sliding windows ride along as scan xs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models.param import ParamDef
+
+
+def _layer_defs(cfg: ModelConfig) -> dict:
+    d = {"ln1": cm.norm_defs(cfg), "ln2": cm.norm_defs(cfg),
+         "attn": cm.attn_defs(cfg)}
+    if cfg.n_experts > 0:
+        d["moe"] = moe_mod.moe_defs(cfg)
+    else:
+        d["mlp"] = cm.mlp_defs(cfg)
+    return d
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": cm.embed_defs(cfg),
+        "layers": cm.stack_defs(_layer_defs(cfg), cfg.n_layers),
+        "final_norm": cm.norm_defs(cfg),
+    }
+
+
+def _windows(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.asarray([cfg.layer_window(i) for i in range(cfg.n_layers)],
+                       jnp.int32)
+
+
+def _block(cfg, p, h, *, positions, window, prefix_len, cache=None,
+           cache_pos=None, ring=False):
+    a, new_cache = cm.attn_apply(
+        cfg, p["attn"], cm.norm_apply(cfg, p["ln1"], h), positions=positions,
+        layer_window=window, prefix_len=prefix_len, cache=cache,
+        cache_pos=cache_pos, ring=ring)
+    h = h + checkpoint_name(a, "attn_out")   # post-all-reduce activation
+    hn = cm.norm_apply(cfg, p["ln2"], h)
+    if cfg.n_experts > 0:
+        f, aux = moe_mod.moe_apply(cfg, p["moe"], hn)
+    else:
+        f, aux = cm.mlp_apply(cfg, p["mlp"], hn), jnp.zeros((), jnp.float32)
+    return h + checkpoint_name(f, "mlp_out"), aux, new_cache
+
+
+def _remat_wrap(body, remat):
+    """remat=True -> full remat; remat="save_collectives" -> recompute
+    everything EXCEPT the post-all-reduce block outputs, so the forward
+    tensor-parallel collectives never re-run in the backward pass."""
+    if remat == "save_collectives":
+        pol = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out")
+        return jax.checkpoint(body, policy=pol)
+    if remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(body, policy=pol)
+    if remat:
+        return jax.checkpoint(body)
+    return body
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            prefix_embeds: jax.Array | None = None, remat=True,
+            act_constraint=None):
+    """Full-sequence forward. Returns (logits [B,S,V], aux_loss).
+
+    prefix_embeds [B,P,D]: bidirectional prefix (PaliGemma image tokens);
+    logits are returned for the *text* positions only.
+    """
+    h = cm.embed_apply(cfg, params["embed"], tokens)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        prefix_len = prefix_embeds.shape[1]
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    positions = jnp.arange(h.shape[1])
+
+    def body(carry, xs):
+        hh, aux = carry
+        lp, window = xs
+        hh, a, _ = _block(cfg, lp, hh, positions=positions, window=window,
+                          prefix_len=prefix_len)
+        if act_constraint is not None:
+            hh = act_constraint(hh)
+        return (hh, aux + a), None
+
+    body = _remat_wrap(body, remat)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               (params["layers"], _windows(cfg)),
+                               unroll=cm.scan_unroll())
+    h = cm.norm_apply(cfg, params["final_norm"], h)
+    if prefix_len:
+        h = h[:, prefix_len:]
+    return cm.unembed_apply(cfg, params["embed"], h), aux
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, remat=True,
+            act_constraint=None):
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          prefix_embeds=batch.get("prefix_embeds"),
+                          remat=remat, act_constraint=act_constraint)
+    return cm.lm_loss(logits, batch["labels"]) + cfg.router_aux_coef * aux
+
+
+# --------------------------------------------------------------------------
+# Serving: KV cache, prefill, single-token decode
+# --------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               window_override: int = 0):
+    """Abstract KV cache.  window_override>0 enables the sub-quadratic
+    long-context mode: each layer's cache is capped at its own sliding
+    window (or the override for full-attention layers) and served as a ring
+    buffer.  With window_override=0 the cache holds the full stream (layer
+    windows are then enforced by masking only, so prefill can always write
+    the whole prompt)."""
+    if window_override > 0:
+        # Stacked-scan cache requires uniform length; use the max needed.
+        ln = max(min(max_len, cfg.layer_window(i) or window_override)
+                 for i in range(cfg.n_layers))
+    else:
+        ln = max_len
+    kv = (cfg.n_layers, batch, ln, cfg.n_kv_heads, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(kv, dtype),
+            "v": jax.ShapeDtypeStruct(kv, dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               window_override: int = 0):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len, dtype, window_override))
+
+
+def _scan_cached(cfg, params, h, *, positions, prefix_len, cache, cache_pos,
+                 ring=False):
+    def body(carry, xs):
+        hh = carry
+        lp, window, ck, cv = xs
+        hh, _, nc = _block(cfg, lp, hh, positions=positions, window=window,
+                           prefix_len=prefix_len, cache={"k": ck, "v": cv},
+                           cache_pos=cache_pos, ring=ring)
+        return hh, (nc["k"], nc["v"])
+
+    h, (nk, nv) = jax.lax.scan(
+        body, h, (params["layers"], _windows(cfg), cache["k"], cache["v"]),
+        unroll=cm.scan_unroll())
+    return h, {"k": nk, "v": nv}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict, *,
+            prefix_embeds: jax.Array | None = None):
+    """Run the prompt through the model, filling the cache from position 0.
+    Returns (logits for the last position [B,V], cache)."""
+    h = cm.embed_apply(cfg, params["embed"], tokens)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        prefix_len = prefix_embeds.shape[1]
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    positions = jnp.arange(h.shape[1])
+    h, cache = _scan_cached(cfg, params, h, positions=positions,
+                            prefix_len=prefix_len, cache=cache, cache_pos=0)
+    h = cm.norm_apply(cfg, params["final_norm"], h[:, -1:])
+    return cm.unembed_apply(cfg, params["embed"], h)[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, cache: dict,
+                pos, *, prefix_len: int = 0, ring: bool = False):
+    """One decode step. token [B] int32; pos scalar int32 (same for batch).
+    ring=True: the cache is a circular buffer shorter than the stream
+    (sub-quadratic long-context serving). Returns (logits [B,V], new cache)."""
+    h = cm.embed_apply(cfg, params["embed"], token[:, None])
+    pos = jnp.asarray(pos)
+    # pos may be scalar (aligned batch) or [B] (ragged continuous batching)
+    positions = pos[None, None] if pos.ndim == 0 else pos[:, None]
+    h, cache = _scan_cached(cfg, params, h, positions=positions,
+                            prefix_len=prefix_len, cache=cache, cache_pos=pos,
+                            ring=ring)
+    h = cm.norm_apply(cfg, params["final_norm"], h)
+    return cm.unembed_apply(cfg, params["embed"], h)[:, 0], cache

@@ -1,0 +1,79 @@
+"""ViT-B/16 classifier — the paper's own architecture (Dosovitskiy et al.,
+2021; Beyer et al. 2022 recipe: GAP head, fixed sin-cos positions).
+
+Used by the paper-faithful example (`examples/vit_local_adamw.py`) and the
+generalization benchmark.  Patch extraction is a reshape+linear (pure JAX).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.param import ParamDef
+
+
+def param_defs(cfg: ModelConfig, patch: int = 16, channels: int = 3) -> dict:
+    d = cfg.d_model
+    return {
+        "patch_proj": ParamDef((patch * patch * channels, d), (None, "embed")),
+        "patch_bias": ParamDef((d,), ("embed",), "zeros"),
+        "layers": cm.stack_defs({
+            "ln1": cm.norm_defs(cfg), "ln2": cm.norm_defs(cfg),
+            "attn": cm.attn_defs(cfg), "mlp": cm.mlp_defs(cfg),
+        }, cfg.n_layers),
+        "final_norm": cm.norm_defs(cfg),
+        "head": ParamDef((d, cfg.n_classes), ("embed", None)),
+        "head_bias": ParamDef((cfg.n_classes,), (None,), "zeros"),
+    }
+
+
+def _sincos_positions(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d, 2).astype(jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
+            patch: int = 16, remat: bool = False) -> jax.Array:
+    """images [B,H,W,C] -> logits [B,n_classes]."""
+    b, hh, ww, c = images.shape
+    ph, pw = hh // patch, ww // patch
+    x = images.reshape(b, ph, patch, pw, patch, c).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, ph * pw, patch * patch * c)
+    h = x.astype(params["patch_proj"].dtype) @ params["patch_proj"] + params["patch_bias"]
+    h = h + _sincos_positions(ph * pw, cfg.d_model).astype(h.dtype)
+    positions = jnp.arange(ph * pw)
+
+    def body(hcar, lp):
+        hn = cm.norm_apply(cfg, lp["ln1"], hcar)
+        a, _ = cm.attn_apply(cfg, lp["attn"], hn, positions=positions,
+                             use_rope=False, kv_source=hn)
+        hcar = hcar + a
+        hcar = hcar + cm.mlp_apply(cfg, lp["mlp"],
+                                   cm.norm_apply(cfg, lp["ln2"], hcar))
+        return hcar, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["layers"], unroll=cm.scan_unroll())
+    h = cm.norm_apply(cfg, params["final_norm"], h)
+    pooled = jnp.mean(h, axis=1)  # GAP head (Beyer et al. 2022)
+    return (pooled @ params["head"] + params["head_bias"]).astype(jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, remat=False):
+    logits = forward(cfg, params, batch["images"], remat=remat)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))

@@ -1,0 +1,172 @@
+"""Zamba2 — Mamba2 backbone + weight-shared attention blocks (arXiv:2411.15242).
+
+Structure: `n_layers` Mamba2 layers; after every `shared_attn_period` of them a
+single *shared* (weight-tied) transformer block runs on the concatenation of
+the hidden state and the original embedding (Zamba's concat trick), projected
+back to d_model.  The backbone is grouped into scans of `shared_attn_period`
+mamba layers so HLO cost reflects the true ratio of mamba:attention compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import mamba2 as m2
+from repro.models.param import ParamDef
+
+
+def shared_block_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "in_proj": ParamDef((2 * d, d), ("embed", "embed")),
+        "ln1": cm.norm_defs(cfg), "ln2": cm.norm_defs(cfg),
+        "attn": cm.attn_defs(cfg),
+        "mlp": cm.mlp_defs(cfg),
+        "out_proj": ParamDef((d, d), ("embed", "embed")),
+    }
+
+
+def n_groups(cfg: ModelConfig) -> tuple[int, int]:
+    g = cfg.n_layers // cfg.shared_attn_period
+    rem = cfg.n_layers - g * cfg.shared_attn_period
+    return g, rem
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    g, rem = n_groups(cfg)
+    mdefs = m2._layer_defs(cfg)
+    grouped = cm.stack_defs(cm.stack_defs(mdefs, cfg.shared_attn_period), g)
+    defs = {
+        "embed": cm.embed_defs(cfg),
+        "groups": grouped,                       # [G, period, ...]
+        "shared": shared_block_defs(cfg),        # weight-tied attention block
+        "final_norm": cm.norm_defs(cfg),
+    }
+    if rem:
+        defs["tail"] = cm.stack_defs(mdefs, rem)
+    return defs
+
+
+def _shared_apply(cfg, p, h, h0, *, positions, cache=None, cache_pos=None,
+                  ring=False):
+    x = jnp.concatenate([h, h0], axis=-1) @ p["in_proj"]
+    a, nc = cm.attn_apply(cfg, p["attn"], cm.norm_apply(cfg, p["ln1"], x),
+                          positions=positions, cache=cache, cache_pos=cache_pos,
+                          ring=ring)
+    x = x + a
+    x = x + cm.mlp_apply(cfg, p["mlp"], cm.norm_apply(cfg, p["ln2"], x))
+    return h + x @ p["out_proj"], nc
+
+
+def _mamba_block(cfg, lp, h, cache=None):
+    out, nc = m2.mixer_apply(cfg, lp["mixer"], cm.norm_apply(cfg, lp["ln"], h),
+                             cache=cache)
+    return h + out, nc
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            remat: bool = True, prefix_embeds=None):
+    h0 = cm.embed_apply(cfg, params["embed"], tokens)
+    positions = jnp.arange(h0.shape[1])
+    g, rem = n_groups(cfg)
+
+    def inner(hh, lp):
+        hh, _ = _mamba_block(cfg, lp, hh)
+        return hh, None
+
+    def group_body(hh, gp):
+        hh, _ = jax.lax.scan(inner, hh, gp, unroll=cm.scan_unroll())
+        hh, _ = _shared_apply(cfg, params["shared"], hh, h0,
+                              positions=positions)
+        return hh, None
+
+    if remat:
+        group_body = jax.checkpoint(group_body)
+    h, _ = jax.lax.scan(group_body, h0, params["groups"],
+                        unroll=cm.scan_unroll())
+    if rem:
+        h, _ = jax.lax.scan(inner, h, params["tail"], unroll=cm.scan_unroll())
+    h = cm.norm_apply(cfg, params["final_norm"], h)
+    return cm.unembed_apply(cfg, params["embed"], h), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, remat=True):
+    logits, _ = forward(cfg, params, batch["tokens"], remat=remat)
+    return cm.lm_loss(logits, batch["labels"])
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               window_override: int = 0):
+    g, rem = n_groups(cfg)
+    mspec = m2.cache_spec(cfg, batch, max_len, dtype)
+    ln = min(max_len, window_override) if window_override else max_len
+    kv = (g, batch, ln, cfg.n_kv_heads, cfg.hd)
+    return {
+        "mamba": mspec,  # [L, ...] over all mamba layers (groups*period + rem)
+        "attn_k": jax.ShapeDtypeStruct(kv, dtype),
+        "attn_v": jax.ShapeDtypeStruct(kv, dtype),
+    }
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16, window_override=0):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        cache_spec(cfg, batch, max_len, dtype, window_override))
+
+
+def _cached_pass(cfg, params, h0, cache, *, positions, cache_pos, ring,
+                 decode: bool):
+    """Shared decode/prefill-free pass over groups with caches."""
+    g, rem = n_groups(cfg)
+    period = cfg.shared_attn_period
+    h = h0
+    mcache = cache["mamba"]
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+    for gi in range(g):
+        for li in range(period):
+            idx = gi * period + li
+            lp = jax.tree.map(lambda x: x[gi, li], params["groups"])
+            mc = ({"conv": mcache["conv"][idx], "ssm": mcache["ssm"][idx]}
+                  if decode else None)
+            h, nc = _mamba_block(cfg, lp, h, cache=mc)
+            new_conv.append(nc["conv"]); new_ssm.append(nc["ssm"])
+        ac = {"k": cache["attn_k"][gi], "v": cache["attn_v"][gi]}
+        h, nac = _shared_apply(cfg, params["shared"], h, h0,
+                               positions=positions, cache=ac,
+                               cache_pos=cache_pos, ring=ring)
+        new_k.append(nac["k"]); new_v.append(nac["v"])
+    for li in range(rem):
+        idx = g * period + li
+        lp = jax.tree.map(lambda x: x[li], params["tail"])
+        mc = ({"conv": mcache["conv"][idx], "ssm": mcache["ssm"][idx]}
+              if decode else None)
+        h, nc = _mamba_block(cfg, lp, h, cache=mc)
+        new_conv.append(nc["conv"]); new_ssm.append(nc["ssm"])
+    newc = {
+        "mamba": {"conv": jnp.stack([c.astype(mcache["conv"].dtype) for c in new_conv]),
+                  "ssm": jnp.stack(new_ssm)},
+        "attn_k": jnp.stack(new_k), "attn_v": jnp.stack(new_v),
+    }
+    return h, newc
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict,
+            **_):
+    h0 = cm.embed_apply(cfg, params["embed"], tokens)
+    positions = jnp.arange(h0.shape[1])
+    h, newc = _cached_pass(cfg, params, h0, cache, positions=positions,
+                           cache_pos=0, ring=False, decode=False)
+    h = cm.norm_apply(cfg, params["final_norm"], h[:, -1:])
+    return cm.unembed_apply(cfg, params["embed"], h)[:, 0], newc
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, cache: dict,
+                pos, *, prefix_len: int = 0, ring: bool = False):
+    del prefix_len
+    h0 = cm.embed_apply(cfg, params["embed"], token[:, None])
+    positions = jnp.asarray(pos)[None, None]
+    h, newc = _cached_pass(cfg, params, h0, cache, positions=positions,
+                           cache_pos=pos, ring=ring, decode=True)
+    h = cm.norm_apply(cfg, params["final_norm"], h)
+    return cm.unembed_apply(cfg, params["embed"], h)[:, 0], newc

@@ -1,0 +1,87 @@
+"""Optimizers, built from scratch in JAX (no optax): SGD+momentum and AdamW.
+
+The update itself is the innermost loop of every local step, so it routes
+through `repro.kernels.ops.adamw_update` — the fused Pallas kernel on TPU,
+the jnp oracle elsewhere.  Optimizer state is a pytree mirroring params;
+with the local-gradient runtime a leading worker axis rides along
+transparently (updates are elementwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Any      # params -> opt_state
+    update: Any    # (params, opt_state, grads, lr) -> (params, opt_state)
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, state, grads, lr):
+        def one(p, m, g):
+            gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m1 = momentum * m + gf
+            d = gf + momentum * m1 if nesterov else m1
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m1
+
+        out = jax.tree.map(one, params, state["mu"], grads)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mu": new_m, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.05, clip_norm: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, state, grads, lr):
+        if clip_norm > 0:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        step = state["step"] + 1
+        stepf = step.astype(jnp.float32)
+
+        def one(p, m, v, g):
+            return kops.adamw_update(p, m, v, g, lr=lr, beta1=beta1,
+                                     beta2=beta2, eps=eps,
+                                     weight_decay=weight_decay, step=stepf)
+
+        out = jax.tree.map(one, params, state["m"], state["v"], grads)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2), "step": step}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def make_optimizer(run_cfg) -> Optimizer:
+    if run_cfg.optimizer == "sgd":
+        return sgd(momentum=0.9, weight_decay=run_cfg.weight_decay)
+    return adamw(weight_decay=run_cfg.weight_decay)

@@ -1,0 +1,130 @@
+"""Local-gradient runtime semantics: the paper's algebraic identities and
+system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.configs.base import RunConfig
+from repro.core import local_update as LU
+from repro.core.sync import worker_mean
+from repro.models import api, param as pm
+
+
+def _setup(arch="phi3-medium-14b", optimizer="sgd", **kw):
+    cfg = R.get_smoke_config(arch)
+    run = RunConfig(optimizer=optimizer, remat=False, total_steps=16,
+                    peak_lr=0.05, weight_decay=0.0, **kw)
+    mod = api.get_module(cfg)
+    params = pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, run, mod, params
+
+
+def _tok_batches(cfg, n, w, b, s, seed=7):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n, w, b, s), 0,
+                              cfg.vocab)
+
+
+def test_local_h1_equals_parallel_sgd():
+    """Paper §3 footnote: Local SGD with H=1 is mathematically equivalent to
+    parallel SGD (linearity of the SGD+momentum update)."""
+    cfg, run, mod, params = _setup(optimizer="sgd")
+    w, b, s = 4, 2, 16
+    toks = _tok_batches(cfg, 6, w, b, s)
+
+    state = LU.init_state(cfg, run, params, w)
+    round_fn = jax.jit(LU.make_train_round(cfg, run))
+    pstate = LU.init_parallel_state(cfg, run, params)
+    pstep = jax.jit(LU.make_parallel_step(cfg, run))
+    for t in range(6):
+        bt = {"tokens": toks[t][None], "labels": toks[t][None]}
+        state, _ = round_fn(state, bt, jnp.array([0.05]))
+        flat = toks[t].reshape(w * b, s)
+        pstate, _ = pstep(pstate, {"tokens": flat, "labels": flat}, 0.05)
+    local = jax.tree.map(lambda x: x[0], state["params"])
+    for a, b_ in zip(jax.tree.leaves(local), jax.tree.leaves(pstate["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=2e-5)
+
+
+def test_replicas_diverge_then_sync_restores_consensus():
+    """Between syncs workers diverge (different data); after sync all replicas
+    are exactly equal — Alg. 2's averaging step."""
+    cfg, run, mod, params = _setup(optimizer="adamw")
+    w = 4
+    state = LU.init_state(cfg, run, params, w)
+    step = jax.jit(LU.make_local_step(cfg, run))
+    toks = _tok_batches(cfg, 3, w, 2, 16)
+    for t in range(3):
+        state, _ = step(state, {"tokens": toks[t], "labels": toks[t]}, 1e-3)
+    # diverged: worker 0 != worker 1 somewhere
+    leaves = jax.tree.leaves(state["params"])
+    assert any(not np.allclose(x[0], x[1]) for x in map(np.asarray, leaves))
+    synced = worker_mean(state["params"])
+    for x in map(np.asarray, jax.tree.leaves(synced)):
+        for k in range(1, w):
+            np.testing.assert_array_equal(x[0], x[k])
+
+
+def test_sync_is_exact_mean():
+    tree = {"a": jnp.arange(12.0).reshape(4, 3)}
+    out = worker_mean(tree)["a"]
+    want = jnp.broadcast_to(jnp.arange(12.0).reshape(4, 3).mean(0,
+                            keepdims=True), (4, 3))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+def test_optimizer_state_not_averaged_by_sync():
+    """The paper averages parameters only; Local AdamW keeps local moments."""
+    cfg, run, mod, params = _setup(optimizer="adamw")
+    w = 2
+    state = LU.init_state(cfg, run, params, w)
+    step = jax.jit(LU.make_local_step(cfg, run))
+    round_fn = jax.jit(LU.make_train_round(cfg, run))
+    toks = _tok_batches(cfg, 2, w, 2, 16)
+    state, _ = step(state, {"tokens": toks[0], "labels": toks[0]}, 1e-3)
+    m_before = jax.tree.leaves(state["opt"]["m"])
+    bt = {"tokens": toks[1][None], "labels": toks[1][None]}
+    state, _ = round_fn(state, bt, jnp.array([1e-3]))
+    # after the round, the per-worker m moments still differ across workers
+    assert any(not np.allclose(np.asarray(x)[0], np.asarray(x)[1])
+               for x in jax.tree.leaves(state["opt"]["m"]))
+
+
+def test_quantized_sync_tracks_exact_sync():
+    """Beyond-paper int8 sync: the quantized average stays within the int8
+    quantization error of the exact average."""
+    cfg, run, mod, params = _setup(optimizer="sgd")
+    runq = dataclasses.replace(run, sync_quantize=True)
+    w = 4
+    toks = _tok_batches(cfg, 2, w, 2, 16)
+
+    s_exact = LU.init_state(cfg, run, params, w)
+    s_quant = LU.init_state(cfg, runq, params, w)
+    r_exact = jax.jit(LU.make_train_round(cfg, run))
+    r_quant = jax.jit(LU.make_train_round(cfg, runq))
+    bt = {"tokens": toks[0][None], "labels": toks[0][None]}
+    s_exact, _ = r_exact(s_exact, bt, jnp.array([0.05]))
+    s_quant, _ = r_quant(s_quant, bt, jnp.array([0.05]))
+    for a, b in zip(jax.tree.leaves(s_exact["params"]),
+                    jax.tree.leaves(s_quant["params"])):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        # error bounded by ~ max|delta| / 127 per tensor
+        assert np.abs(a - b).max() < 0.1 * max(np.abs(a).max(), 1e-6) + 1e-4
+
+
+def test_outer_momentum_sync_changes_trajectory_but_stays_finite():
+    cfg, run, mod, params = _setup(optimizer="sgd")
+    runm = dataclasses.replace(run, outer_momentum=0.9)
+    w = 2
+    toks = _tok_batches(cfg, 4, w, 2, 16)
+    s = LU.init_state(cfg, runm, params, w)
+    r = jax.jit(LU.make_train_round(cfg, runm))
+    for t in range(4):
+        bt = {"tokens": toks[t][None], "labels": toks[t][None]}
+        s, loss = r(s, bt, jnp.array([0.05]))
+        assert np.isfinite(float(loss))
+    for x in jax.tree.leaves(s["params"]):
+        assert np.isfinite(np.asarray(x)).all()

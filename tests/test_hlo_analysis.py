@@ -1,0 +1,52 @@
+"""Unit tests for the HLO collective-bytes parser and pod-crossing (DCI)
+classification — the §Roofline measurement layer."""
+from repro.launch import hlo_analysis as H
+
+
+def test_collective_bytes_basic():
+    hlo = """
+  %x = f32[16,1024]{1,0} all-reduce(%a), replica_groups=[16,16]<=[256], to_apply=%add
+  %y = bf16[8,256]{1,0} all-gather(%b), replica_groups=[16,16]<=[256]
+  %z = f32[4]{0} add(%c, %d)
+"""
+    out = H.collective_bytes(hlo)
+    assert out["all-reduce"] == 16 * 1024 * 4
+    assert out["all-gather"] == 8 * 256 * 2
+    assert out["all-to-all"] == 0
+
+
+def test_start_done_not_double_counted():
+    hlo = """
+  %s = f32[10]{0} all-reduce-start(%a), replica_groups=[2,2]<=[4]
+  %d = f32[10]{0} all-reduce-done(%s)
+"""
+    out = H.collective_bytes(hlo)
+    assert out["all-reduce"] == 40
+
+
+def test_tuple_all_reduce_sums_all_results():
+    hlo = ("%t = (f32[8]{0}, f32[8]{0}) all-reduce(%a, %b), "
+           "replica_groups=[4,4]<=[16]\n")
+    assert H.collective_bytes(hlo)["all-reduce"] == 64
+
+
+def test_dci_classification_consecutive_groups():
+    # [2,256]<=[512]: groups {0..255}, {256..511} -> intra-pod
+    intra = ("%x = f32[100]{0} all-reduce(%a), replica_groups=[2,256]<=[512], "
+             "to_apply=%add\n")
+    out = H.collective_bytes(intra, pod_size=256)
+    assert out["dci"] == 0
+    # [256,2]<=[2,256]T(1,0): groups {i, i+256} -> every group crosses pods
+    cross = ("%x = f32[100]{0} all-reduce(%a), "
+             "replica_groups=[256,2]<=[2,256]T(1,0), to_apply=%add\n")
+    out = H.collective_bytes(cross, pod_size=256)
+    assert out["dci"] == 400
+
+
+def test_dci_explicit_list_groups():
+    cross = "%x = f32[10]{0} collective-permute(%a), replica_groups={{0,300},{1,301}}\n"
+    out = H.collective_bytes(cross, pod_size=256)
+    assert out["dci"] == 40
+    intra = "%x = f32[10]{0} collective-permute(%a), replica_groups={{0,3},{1,2}}\n"
+    out = H.collective_bytes(intra, pod_size=256)
+    assert out["dci"] == 0

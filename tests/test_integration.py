@@ -1,0 +1,187 @@
+"""Integration tests: end-to-end training improves the loss, checkpoints
+round-trip, the serve driver generates, and the distributed dry-run lowers
+on a real (host-device) mesh via subprocess."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs import registry as R
+from repro.configs.base import RunConfig
+from repro.core import local_update as LU
+from repro.launch.train import train
+from repro.models import api, param as pm
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_training_reduces_loss_qsr():
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = RunConfig(schedule="qsr", optimizer="adamw", total_steps=40,
+                    peak_lr=3e-3, alpha=0.0008, h_base=2, warmup_steps=4,
+                    remat=False, weight_decay=0.01)
+    state, hist = train(cfg, run, workers=2, b_loc=4, seq=32, log_every=0)
+    losses = [l for _, _, l, _ in hist]
+    assert losses[-1] < losses[0] - 0.3, losses
+    assert sum(h for _, h, _, _ in hist) == 40
+
+
+def test_checkpoint_roundtrip_and_resume():
+    cfg = R.get_smoke_config("mamba2-130m")
+    run = RunConfig(optimizer="adamw", remat=False, total_steps=8,
+                    peak_lr=1e-3)
+    params = pm.init_params(api.get_module(cfg).param_defs(cfg),
+                            jax.random.PRNGKey(0))
+    state = LU.init_state(cfg, run, params, 2)
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        ckpt_io.save(d, state, step=5)
+        restored, step = ckpt_io.restore(d, state)
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serve_generate_all_decoder_families():
+    from repro.launch.serve import generate
+    for arch in ["gemma3-4b", "mamba2-130m", "zamba2-1.2b"]:
+        cfg = R.get_smoke_config(arch)
+        mod = api.get_module(cfg)
+        params = pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(0))
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                     cfg.vocab)
+        toks = generate(cfg, params, prompts, gen_len=4)
+        assert toks.shape == (2, 12)
+        assert (np.asarray(toks) >= 0).all()
+        assert (np.asarray(toks) < cfg.vocab).all()
+
+
+def test_ring_window_generation_matches_full_cache_within_window():
+    """Greedy generation with a ring cache >= context must equal full-cache
+    generation (the window never truncates anything)."""
+    from repro.launch.serve import generate
+    cfg = R.get_smoke_config("qwen1.5-110b")
+    mod = api.get_module(cfg)
+    params = pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    full = generate(cfg, params, prompts, gen_len=6, max_len=64)
+    ring = generate(cfg, params, prompts, gen_len=6, max_len=64,
+                    window_override=32)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(ring))
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_mesh_subprocess():
+    """Lower+compile train_round and decode on an 8-device host mesh (the
+    multi-pod dry-run path, reduced): proves sharded lowering end-to-end."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, json
+import jax.numpy as jnp
+from repro.configs import registry as R
+from repro.configs.base import RunConfig
+from repro.core import local_update as LU
+from repro.models import api, param as pm
+from repro.launch.shapes import _state_specs, _batch_specs, _ns
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = R.get_smoke_config("starcoder2-3b")
+run = RunConfig(optimizer="adamw", remat=False)
+mod = api.get_module(cfg)
+params = pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(0))
+w = 4  # pod*data
+state = LU.init_state(cfg, run, params, w)
+sspec = _state_specs(cfg, run, "dp", mesh)
+bspec = _batch_specs(cfg, 1, ("pod", "data"), None)
+h, b, s = 2, 2, 32
+toks = jax.random.randint(jax.random.PRNGKey(1), (h, w, b, s), 0, cfg.vocab)
+batch = {"tokens": toks, "labels": toks}
+lrs = jnp.full((h,), 1e-3, jnp.float32)
+rf = LU.make_train_round(cfg, run)
+with mesh:
+    jf = jax.jit(rf, in_shardings=(_ns(mesh, sspec), _ns(mesh, bspec),
+                                   NamedSharding(mesh, P())),
+                 out_shardings=(_ns(mesh, sspec), NamedSharding(mesh, P())))
+    compiled = jf.lower(state, batch, lrs).compile()
+    out_state, loss = jf(state, batch, lrs)  # actually EXECUTE sharded
+hlo = compiled.as_text()
+assert "all-reduce" in hlo  # the sync collective exists
+import numpy as np
+ps = jax.device_get(out_state["params"])
+for x in jax.tree.leaves(ps):
+    assert np.isfinite(np.asarray(x)).all()
+    for k in range(1, w):  # post-sync consensus across the worker axis
+        np.testing.assert_allclose(np.asarray(x)[0], np.asarray(x)[k],
+                                   rtol=2e-2, atol=2e-2)
+print("OK", float(loss))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_fsdp_moe_shard_map_subprocess():
+    """fsdp policy + explicit shard_map MoE dispatch EXECUTES correctly on an
+    8-device host mesh (the kimi-k2 §Perf configuration, reduced)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import registry as R
+from repro.configs.base import RunConfig
+from repro.core import local_update as LU
+from repro.models import api, moe, param as pm
+from repro.launch.shapes import _state_specs, _batch_specs, _ns
+
+import dataclasses
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+# aux load-balance loss uses per-shard statistics under expert parallelism
+# (a different, equally valid estimator) -> disable it for exact comparison
+cfg = dataclasses.replace(R.get_smoke_config("kimi-k2-1t-a32b"),
+                          router_aux_coef=0.0)
+run = RunConfig(sharding="fsdp", remat=False, moe_dispatch="shard_map",
+                microbatch=2)
+moe.set_dispatch("shard_map", mesh)
+mod = api.get_module(cfg)
+params = pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(0))
+w = 1
+state = LU.init_state(cfg, run, params, w)
+sspec = _state_specs(cfg, run, "fsdp", mesh)
+b, s = 8, 32
+toks = jax.random.randint(jax.random.PRNGKey(1), (w, b, s), 0, cfg.vocab)
+batch = {"tokens": toks, "labels": toks}
+bspec = _batch_specs(cfg, 0, None, "data")
+step = LU.make_local_step(cfg, run)
+with mesh:
+    jf = jax.jit(step, in_shardings=(_ns(mesh, sspec), _ns(mesh, bspec), None),
+                 out_shardings=(_ns(mesh, sspec), NamedSharding(mesh, P())))
+    new_state, loss = jf(state, batch, 1e-3)
+hlo = jf.lower(state, batch, 1e-3).compile().as_text()
+assert "all-to-all" in hlo  # the explicit expert-parallel dispatch
+assert np.isfinite(float(loss))
+# compare against the unsharded global-dispatch reference
+moe.set_dispatch("auto", None)
+run0 = RunConfig(sharding="fsdp", remat=False)
+step0 = jax.jit(LU.make_local_step(cfg, run0))
+ref_state, ref_loss = step0(state, batch, 1e-3)
+assert abs(float(loss) - float(ref_loss)) < 1e-4, (loss, ref_loss)
+print("OK", float(loss))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

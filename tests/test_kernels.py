@@ -1,0 +1,151 @@
+"""Per-kernel oracle tests: sweep shapes/dtypes, run the Pallas kernel body
+in interpret mode (CPU), assert_allclose against the ref.py pure-jnp oracle
+(deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.adamw_update import adamw_update
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rms_norm
+from repro.kernels.swiglu import swiglu
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------- rmsnorm --
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 128), (2, 33, 256), (1, 7, 512),
+                                   (128, 1024), (5, 384)])
+def test_rmsnorm_matches_oracle(shape, dtype):
+    rng = jax.random.PRNGKey(hash(shape) % 2**31)
+    x = jax.random.normal(rng, shape, dtype)
+    sc = 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(1), shape[-1:])
+    got = rms_norm(x, sc, interpret=True)
+    want = ref.rms_norm(x, sc)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+# ------------------------------------------------------------------ adamw --
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [64, 1000, 70_000])
+@pytest.mark.parametrize("step", [1.0, 100.0])
+def test_adamw_matches_oracle(n, dtype, step):
+    k = jax.random.PRNGKey(n)
+    p = jax.random.normal(k, (n,), dtype)
+    m = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (n,))
+    v = jnp.abs(0.1 * jax.random.normal(jax.random.PRNGKey(2), (n,)))
+    g = jax.random.normal(jax.random.PRNGKey(3), (n,), dtype)
+    kw = dict(lr=1e-3, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.1,
+              step=step)
+    got = adamw_update(p, m, v, g, interpret=True, **kw)
+    want = ref.adamw_update(p, m, v, g, **kw)
+    for gx, wx in zip(got, want):
+        np.testing.assert_allclose(np.asarray(gx, np.float32),
+                                   np.asarray(wx, np.float32),
+                                   rtol=TOL[dtype], atol=TOL[dtype])
+
+
+# -------------------------------------------------------- flash attention --
+
+CASES = [
+    # (sq, sk, hq, hkv, d, causal, window, prefix)
+    (128, 128, 4, 4, 64, True, 0, 0),
+    (256, 256, 8, 2, 64, True, 0, 0),      # GQA 4:1
+    (256, 256, 8, 1, 128, True, 0, 0),     # MQA
+    (256, 256, 4, 4, 64, True, 100, 0),    # sliding window
+    (192, 192, 4, 2, 64, True, 64, 48),    # window + prefix-LM
+    (64, 320, 4, 4, 64, True, 0, 0),       # kv longer than q (decode-ish)
+    (1, 257, 8, 2, 64, True, 0, 0),        # single-token decode, ragged kv
+    (100, 200, 4, 4, 32, False, 0, 0),     # non-causal (encoder)
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", CASES)
+def test_flash_attention_matches_oracle(case, dtype):
+    sq, sk, hq, hkv, d, causal, window, prefix = case
+    ks = jax.random.split(jax.random.PRNGKey(sum(case)), 3)
+    q = jax.random.normal(ks[0], (2, sq, hq, d), dtype)
+    k = jax.random.normal(ks[1], (2, sk, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (2, sk, hkv, d), dtype)
+    qoff = sk - sq if sq < sk else 0
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          prefix_len=prefix, q_offset=qoff, interpret=True)
+    want = ref.attention(q, k, v, causal=causal, window=window,
+                         prefix_len=prefix, q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5 * TOL[dtype], atol=5 * TOL[dtype])
+
+
+@given(sq=st.integers(1, 96), extra_k=st.integers(0, 64),
+       hkv=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2, 4]),
+       window=st.integers(0, 64))
+@settings(max_examples=15, deadline=None)
+def test_flash_attention_property_sweep(sq, extra_k, hkv, g, window):
+    sk = sq + extra_k
+    d = 32
+    hq = hkv * g
+    ks = jax.random.split(jax.random.PRNGKey(sq * 131 + extra_k), 3)
+    q = jax.random.normal(ks[0], (1, sq, hq, d))
+    k = jax.random.normal(ks[1], (1, sk, hkv, d))
+    v = jax.random.normal(ks[2], (1, sk, hkv, d))
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          q_offset=extra_k, interpret=True,
+                          block_q=32, block_k=32)
+    want = ref.attention(q, k, v, causal=True, window=window, q_offset=extra_k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ring_buffer_mask_equals_dense_window():
+    """The ring-buffer decode path (k_positions) must equal attention over
+    the dense window — validates the long_500k serving path."""
+    d, h = 32, 2
+    ln, pos = 8, 13  # ring shorter than the stream
+    key = jax.random.PRNGKey(0)
+    # build a ring cache: positions pos-7..pos stored at idx (p % ln)
+    ks = jax.random.normal(key, (1, pos + 1, h, d))
+    vs = jax.random.normal(jax.random.PRNGKey(1), (1, pos + 1, h, d))
+    ring_k = jnp.zeros((1, ln, h, d))
+    ring_v = jnp.zeros((1, ln, h, d))
+    for p in range(pos + 1):
+        ring_k = ring_k.at[:, p % ln].set(ks[:, p])
+        ring_v = ring_v.at[:, p % ln].set(vs[:, p])
+    write = pos % ln
+    base = pos - write
+    idx = jnp.arange(ln)
+    k_positions = jnp.where(idx <= write, base + idx, base - ln + idx)
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, h, d))
+    got = ref.attention(q, ring_k, ring_v, causal=True, q_offset=pos,
+                        k_positions=k_positions)
+    want = ref.attention(q, ks[:, pos + 1 - ln:], vs[:, pos + 1 - ln:],
+                         causal=True, q_offset=ln - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ----------------------------------------------------------------- swiglu --
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 32, 128, 256), (2, 100, 64, 384),
+                                   (1, 7, 256, 512)])
+def test_swiglu_matches_oracle(shape, dtype):
+    b, n, d, f = shape
+    ks = jax.random.split(jax.random.PRNGKey(sum(shape)), 3)
+    x = jax.random.normal(ks[0], (b, n, d), dtype)
+    wg = (jax.random.normal(ks[1], (d, f)) / jnp.sqrt(d)).astype(dtype)
+    wi = (jax.random.normal(ks[2], (d, f)) / jnp.sqrt(d)).astype(dtype)
+    got = swiglu(x, wg, wi, interpret=True, block_r=64, block_f=128)
+    want = ref.swiglu(x, wg, wi)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5 * TOL[dtype], atol=5 * TOL[dtype])

@@ -1,0 +1,76 @@
+"""Property tests for the declarative param/sharding-spec system."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.models import api, param as pm
+from repro.models.param import ParamDef
+
+
+class _FakeMesh:
+    def __init__(self, sizes):
+        import numpy as np
+        self.axis_names = tuple(sizes)
+        self.devices = np.zeros(tuple(sizes.values()))
+
+
+MESH1 = _FakeMesh({"data": 16, "model": 16})
+MESH2 = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@given(dim=st.integers(1, 4096), policy=st.sampled_from(["dp", "fsdp"]))
+@settings(max_examples=40, deadline=None)
+def test_specs_only_shard_divisible_dims(dim, policy):
+    d = ParamDef((dim, dim), ("embed", "mlp"))
+    spec = pm.spec_for(d.axes, d.shape, policy, MESH1)
+    for entry, size in zip(spec, d.shape):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= dict(zip(MESH1.axis_names, MESH1.devices.shape))[a]
+        assert size % total == 0
+
+
+@pytest.mark.parametrize("arch", list(R.ARCHS))
+@pytest.mark.parametrize("mesh", [MESH1, MESH2])
+def test_full_config_specs_all_divisible(arch, mesh):
+    """Every FULL-size parameter of every assigned arch gets a legal spec
+    under its default policy on both production meshes."""
+    cfg = R.get_config(arch)
+    policy = R.get_policy(arch)
+    defs = api.get_module(cfg).param_defs(cfg)
+    specs = pm.param_specs(defs, policy, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for d, s in zip(jax.tree.leaves(defs, is_leaf=pm.is_def),
+                    jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        for dim, entry in zip(d.shape, tuple(s)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            assert dim % total == 0, (arch, d.shape, s)
+
+
+def test_no_mesh_axis_claimed_twice_per_tensor():
+    d = ParamDef((256, 256, 256), ("experts", "embed", "mlp"))
+    spec = pm.spec_for(d.axes, d.shape, "fsdp", MESH2)
+    used = []
+    for entry in spec:
+        if entry is None:
+            continue
+        used += list(entry) if isinstance(entry, tuple) else [entry]
+    assert len(used) == len(set(used))
+
+
+def test_worker_counts():
+    assert pm.worker_count("dp", MESH1) == 16
+    assert pm.worker_count("dp", MESH2) == 32
+    assert pm.worker_count("fsdp", MESH1) == 1
+    assert pm.worker_count("fsdp", MESH2) == 2
