@@ -9,6 +9,12 @@ model; we reproduce its arithmetic exactly.)
 Part 2 — apply the same model to OUR target hardware: per-step compute and
 comm times from the dry-run roofline terms (benchmarks/roofline.py), giving
 projected v5e wall-clock savings for QSR per architecture.
+
+Part 3 — the compile-cost column: wall-clock also pays one XLA compile per
+distinct round program.  The legacy runtime jits one `train_round` per
+distinct H the schedule visits; the RoundEngine's power-of-two bucketing
+(core/engine.py) compiles at most ceil(log2(H_max)) + 1 programs.  This
+section reports both counts per Table 4 recipe.
 """
 from __future__ import annotations
 
@@ -47,11 +53,16 @@ def appf_model(t_para: float, t_h1: float, h1: int):
     return t_comm, t_comp
 
 
+def _qsr_run(recipe, h_base: int) -> RunConfig:
+    """The one recipe-dict -> RunConfig mapping (Parts 1 and 3 must agree)."""
+    return RunConfig(schedule="qsr", h_base=h_base,
+                     alpha=recipe["alphas"][h_base],
+                     peak_lr=recipe["peak_lr"], total_steps=recipe["total"],
+                     warmup_steps=recipe["warmup"])
+
+
 def qsr_fraction(recipe, h_base: int) -> float:
-    run = RunConfig(schedule="qsr", h_base=h_base,
-                    alpha=recipe["alphas"][h_base],
-                    peak_lr=recipe["peak_lr"], total_steps=recipe["total"],
-                    warmup_steps=recipe["warmup"])
+    run = _qsr_run(recipe, h_base)
     return schedules.comm_fraction(run, make_lr_fn(run))
 
 
@@ -123,6 +134,36 @@ def v5e_projection(csv_rows: list | None = None) -> None:
                                  f"{tp/q4:.3f}"))
 
 
+def compile_report(csv_rows: list | None = None) -> None:
+    """Part 3: XLA round-program compiles per run, legacy vs bucketed.
+
+    legacy = one jit per distinct H visited; bucketed = one per power-of-two
+    bucket, provably <= ceil(log2(H_max)) + 1 (engine.max_programs)."""
+    from repro.core.engine import bucket_pow2, program_bound
+
+    print("\n== Table 4 extra column: XLA compiles per run ==")
+    print(f"{'setting':24s} {'distinct H':>10s} {'buckets':>8s} "
+          f"{'bound':>6s} {'drop':>6s}")
+    for name, d in TABLE4.items():
+        r = d["recipe"]
+        for hb in sorted(r["alphas"]):
+            run = _qsr_run(r, hb)
+            lr = make_lr_fn(run)
+            hs = [h for _, h in schedules.rounds(run, lr)]  # one walk
+            n_h = len(set(hs))
+            n_b = len({bucket_pow2(h) for h in hs})
+            bound = program_bound(max(hs))
+            assert n_b <= bound, (name, hb, n_b, bound)
+            print(f"{name + f' H>={hb}':24s} {n_h:10d} {n_b:8d} "
+                  f"{bound:6d} {n_h / n_b:5.1f}x")
+            if csv_rows is not None:
+                csv_rows.append((f"table4/{name}/h{hb}/compiles_legacy", "",
+                                 str(n_h)))
+                csv_rows.append((f"table4/{name}/h{hb}/compiles_bucketed", "",
+                                 str(n_b)))
+    print("bucketed engine: O(log2 Hmax) compiles; legacy: O(#distinct H)")
+
+
 def run(csv_rows: list | None = None) -> None:
     print("\n== Table 4 / App. F: wall-clock model vs paper ==")
     print(f"{'setting':18s} {'pred T_H2':>9s} {'paper':>6s} "
@@ -146,6 +187,7 @@ def run(csv_rows: list | None = None) -> None:
         assert err_h2 < 8.0 and err_q < 8.0, (name, err_h2, err_q)
     print("model error <8% on every Table 4 setting "
           "(paper reports ~1% for its own runs)")
+    compile_report(csv_rows)
     v5e_projection(csv_rows)
 
 

@@ -31,12 +31,16 @@ def _decode(obj):
     return obj
 
 
-def save(path: str, tree: Any, *, step: int | None = None) -> None:
+def save(path: str, tree: Any, *, step: int | None = None,
+         extra: dict | None = None) -> None:
+    """`extra` is free-form msgpack-serializable run metadata (e.g. the
+    RoundEngine's H-trace) stored alongside the state."""
     os.makedirs(path, exist_ok=True)
     leaves, treedef = jax.tree.flatten(tree)
     payload = {
         "treedef": str(treedef),
         "step": step,
+        "extra": extra or {},
         "leaves": [_encode(jax.device_get(x)) for x in leaves],
     }
     tmp = os.path.join(path, "state.msgpack.tmp")
@@ -47,6 +51,12 @@ def save(path: str, tree: Any, *, step: int | None = None) -> None:
 
 def restore(path: str, like: Any) -> tuple[Any, int | None]:
     """Restore into the structure of `like` (shapes/dtypes validated)."""
+    tree, step, _ = restore_with_meta(path, like)
+    return tree, step
+
+
+def restore_with_meta(path: str, like: Any) -> tuple[Any, int | None, dict]:
+    """Like `restore`, plus the `extra` metadata dict — one file read."""
     with open(os.path.join(path, "state.msgpack"), "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
     leaves_like, treedef = jax.tree.flatten(like)
@@ -61,7 +71,8 @@ def restore(path: str, like: Any) -> tuple[Any, int | None]:
             out.append(jnp.asarray(g.astype(w.dtype)))
         else:
             out.append(got)
-    return jax.tree.unflatten(treedef, out), payload.get("step")
+    return (jax.tree.unflatten(treedef, out), payload.get("step"),
+            payload.get("extra") or {})
 
 
 def exists(path: str) -> bool:

@@ -1,0 +1,320 @@
+"""RoundEngine: one runtime that owns compilation, state, and data for a
+training run — shared by the local-gradient path (paper Alg. 2, any
+H-schedule) and the data-parallel baseline (Alg. 1 == the same engine with
+H=1 every round).
+
+Why it exists: QSR grows H as (alpha/eta)^2 while the lr decays (PAPER.md
+eq. 2), so a real run visits many distinct H values.  Jitting a fresh
+`train_round` per raw H makes compile time scale with the *schedule*; this
+engine makes it scale with the *hardware* (log of the largest round).
+
+## Bucketing / mask contract
+
+* Every requested H is bucketed up to the next power of two
+  `Hp = bucket_pow2(H)`; one round program is compiled per bucket, so a full
+  QSR schedule compiles at most `ceil(log2(H_max)) + 1` programs instead of
+  one per distinct H.
+* A bucketed program scans Hp steps with a per-step validity mask
+  (`step i valid iff i < h`).  Each scan step is a `lax.cond` on the mask:
+  a masked step skips the local step entirely (state — including the
+  optimizer step counter — passes through unchanged, no FLOPs spent),
+  contributes 0 to the loss / grad-norm sums, and the round mean divides by
+  h, not Hp.  Loss, lr, and sync semantics are therefore exact for any
+  h <= Hp, and because the valid-step computation lives in its own cond
+  branch it stays bitwise-identical to an unpadded scan over the same
+  batches (verified by tests/test_engine.py).
+* State buffers are donated to the round program (`donate_argnums=0`) when
+  the backend supports it, so params/optimizer memory is reused across
+  rounds instead of doubled.
+
+## Data modes
+
+* `data="device"`: batches are synthesized *inside* the jitted round from
+  `jax.random.fold_in(seed, global_step)` (data/synthetic.py
+  `device_batch_fn`) — no host-side `[H, W, B, S]` stack, no host->device
+  transfer per round.
+* `data="host"`: the legacy numpy TokenStream path, kept for
+  reproducibility tests and real-data loaders.
+
+## Telemetry
+
+Each round returns in-graph metrics (computed in the same program, no extra
+device round-trips): the loss and worker-mean global grad norm, each
+averaged over the round's valid steps, and the pre-sync worker divergence
+`mean_i ||x_i - x_bar||_2` — the quantity the paper's SDE analysis ties to
+the generalization benefit of large H.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io as ckpt_io
+from repro.core import local_update as LU
+from repro.core import schedules
+from repro.core.sync import make_sync
+from repro.data.synthetic import TokenStream, device_batch_fn, make_train_batch
+from repro.models import api, common as cm, param as pm
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# Bucketing
+# --------------------------------------------------------------------------
+
+def bucket_pow2(h: int) -> int:
+    """Smallest power of two >= h (the compile-cache key)."""
+    return 1 if h <= 1 else 1 << (h - 1).bit_length()
+
+
+def schedule_buckets(run_cfg, lr_fn) -> list[int]:
+    """Distinct power-of-two buckets a full schedule visits, ascending."""
+    return sorted({bucket_pow2(h) for _, h in schedules.rounds(run_cfg, lr_fn)})
+
+
+def program_bound(h_max: int) -> int:
+    """Compile-cache bound for a run whose largest round is h_max:
+    ceil(log2 Hmax)+1 possible power-of-two buckets."""
+    return int(math.ceil(math.log2(h_max))) + 1 if h_max > 1 else 1
+
+
+def max_programs(run_cfg, lr_fn) -> int:
+    """Upper bound on compiled round programs for a full schedule."""
+    return program_bound(max(h for _, h in schedules.rounds(run_cfg, lr_fn)))
+
+
+# --------------------------------------------------------------------------
+# In-graph telemetry
+# --------------------------------------------------------------------------
+
+def worker_divergence(params: Pytree) -> jax.Array:
+    """mean_i ||x_i - x_bar||_2 over the leading worker axis, all leaves."""
+    sq = 0.0
+    for x in jax.tree.leaves(params):
+        xf = x.astype(jnp.float32)
+        m = jnp.mean(xf, axis=0, keepdims=True)
+        sq = sq + jnp.sum(jnp.square(xf - m), axis=tuple(range(1, xf.ndim)))
+    return jnp.mean(jnp.sqrt(sq))
+
+
+def _metrics(state, losses, gns, denom):
+    div = worker_divergence(state["params"])
+    return {"loss": jnp.sum(losses) / denom,
+            "grad_norm": jnp.sum(gns) / denom,
+            "divergence": div}
+
+
+# --------------------------------------------------------------------------
+# Round-program builders (module-level so launch/shapes.py can lower them
+# without an engine instance)
+# --------------------------------------------------------------------------
+
+def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None):
+    """Padded, masked communication round.
+
+    Host data:   fn(state, batches [Hp, W, B, ...], lrs [Hp], mask [Hp])
+    Device data: fn(state, t0 scalar, lrs [Hp], mask [Hp])  (synth given)
+    -> (state, {"loss", "grad_norm", "divergence"}).
+    """
+    local_step = LU.make_local_step(cfg, run_cfg, with_metrics=True)
+    sync = make_sync(run_cfg)
+
+    def body(st, get_batch, lr, valid):
+        # lax.cond keeps the valid-step computation an isolated XLA
+        # subcomputation: valid steps stay bitwise-identical to the unpadded
+        # program (a jnp.where select would perturb fusion at ulp level) and
+        # masked steps skip their FLOPs instead of computing-and-discarding.
+        # get_batch is called *inside* the taken branch so device-mode
+        # synthesis is skipped on masked steps too (a closed-over batch
+        # value would be an unconditionally-computed cond operand).
+        def do(st):
+            st2, (loss, gn) = local_step(st, get_batch(), lr)
+            return st2, loss, gn
+        def skip(st):
+            return st, jnp.float32(0.0), jnp.float32(0.0)
+        st2, loss, gn = jax.lax.cond(valid, do, skip, st)
+        return st2, (loss, gn)
+
+    def finish(state, losses, gns, mask):
+        denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+        m = _metrics(state, losses, gns, denom)
+        return sync(state), m
+
+    if synth is None:
+        def round_fn(state, batches, lrs, mask):
+            def step(st, xs):
+                batch, lr, valid = xs
+                return body(st, lambda: batch, lr, valid)
+            state, (losses, gns) = jax.lax.scan(
+                step, state, (batches, lrs, mask), unroll=cm.scan_unroll())
+            return finish(state, losses, gns, mask)
+    else:
+        def round_fn(state, t0, lrs, mask):
+            hp = lrs.shape[0]
+            def step(st, xs):
+                i, lr, valid = xs
+                return body(st, lambda: synth(t0 + i), lr, valid)
+            state, (losses, gns) = jax.lax.scan(
+                step, state, (jnp.arange(hp), lrs, mask),
+                unroll=cm.scan_unroll())
+            return finish(state, losses, gns, mask)
+
+    return round_fn
+
+
+def make_exact_round(cfg, run_cfg, synth: Callable | None = None):
+    """Legacy exact-H round (one compile per distinct H) + engine telemetry.
+
+    Same state arithmetic as `local_update.make_train_round`; kept as the
+    escape hatch (`--engine legacy`) and the reference the bucketed path is
+    tested bitwise against.
+    """
+    local_step = LU.make_local_step(cfg, run_cfg, with_metrics=True)
+    sync = make_sync(run_cfg)
+
+    def finish_exact(state, losses, gns):
+        m = _metrics(state, losses, gns, jnp.float32(losses.shape[0]))
+        return sync(state), m
+
+    if synth is None:
+        def round_fn(state, batches, lrs):
+            def step(st, xs):
+                batch, lr = xs
+                st, (loss, gn) = local_step(st, batch, lr)
+                return st, (loss, gn)
+            state, (losses, gns) = jax.lax.scan(step, state, (batches, lrs),
+                                                unroll=cm.scan_unroll())
+            return finish_exact(state, losses, gns)
+    else:
+        def round_fn(state, t0, lrs):
+            h = lrs.shape[0]
+            def step(st, xs):
+                i, lr = xs
+                st, (loss, gn) = local_step(st, synth(t0 + i), lr)
+                return st, (loss, gn)
+            state, (losses, gns) = jax.lax.scan(
+                step, state, (jnp.arange(h), lrs), unroll=cm.scan_unroll())
+            return finish_exact(state, losses, gns)
+
+    return round_fn
+
+
+# --------------------------------------------------------------------------
+# The engine
+# --------------------------------------------------------------------------
+
+class RoundEngine:
+    """Owns the compile cache, run state, data source, and H-trace of a run.
+
+    mode:  "bucketed" (power-of-two compile cache, masked scan — default) |
+           "legacy"   (one program per distinct H — the seed behavior)
+    data:  "device" (in-graph fold_in batch synthesis — default) |
+           "host"   (numpy TokenStream, batches staged per round)
+
+    The data-parallel baseline (Alg. 1) is this same engine driven with the
+    "parallel" schedule: every round has H=1, so workers sync (average) after
+    each step — for SGD this is step-for-step the global-batch baseline.
+    """
+
+    def __init__(self, cfg, run_cfg, *, workers: int, b_loc: int, seq: int,
+                 seed: int = 0, mode: str = "bucketed", data: str = "device",
+                 donate: bool | None = None):
+        assert mode in ("bucketed", "legacy"), mode
+        assert data in ("device", "host"), data
+        self.cfg, self.run_cfg = cfg, run_cfg
+        self.workers, self.b_loc, self.seq, self.seed = workers, b_loc, seq, seed
+        self.mode, self.data = mode, data
+        # donation is a no-op warning on CPU; auto-enable elsewhere
+        self.donate = (jax.default_backend() != "cpu") if donate is None else donate
+        self.stream = TokenStream(vocab=max(cfg.vocab, 2), seed=seed)
+        self._synth = (device_batch_fn(cfg, self.stream, workers, b_loc, seq)
+                       if data == "device" else None)
+        self._programs: dict[int, Any] = {}
+        self.compiles = 0
+        self.cache_hits = 0
+        self.h_trace: list[tuple[int, int]] = []   # (t_start, h) executed
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self, params_single: Pytree | None = None) -> Pytree:
+        if params_single is None:
+            mod = api.get_module(self.cfg)
+            params_single = pm.init_params(mod.param_defs(self.cfg),
+                                           jax.random.PRNGKey(self.seed),
+                                           jnp.float32)
+        return LU.init_state(self.cfg, self.run_cfg, params_single,
+                             self.workers)
+
+    # -- compilation ------------------------------------------------------
+
+    def _program(self, hp: int):
+        """Jitted round program for padded length hp (the cache key)."""
+        if hp in self._programs:
+            self.cache_hits += 1
+            return self._programs[hp]
+        make = make_bucketed_round if self.mode == "bucketed" else make_exact_round
+        fn = make(self.cfg, self.run_cfg, self._synth)
+        jit_kw = {"donate_argnums": (0,)} if self.donate else {}
+        self._programs[hp] = jax.jit(fn, **jit_kw)
+        self.compiles += 1
+        return self._programs[hp]
+
+    def compile_stats(self) -> dict:
+        return {"compiles": self.compiles, "cache_hits": self.cache_hits,
+                "programs": sorted(self._programs)}
+
+    # -- execution --------------------------------------------------------
+
+    def run_round(self, state: Pytree, t: int, h: int, lr_fn):
+        """Execute the communication round starting at step t with period h.
+
+        Returns (state, metrics) where metrics holds device scalars
+        {"loss", "grad_norm", "divergence"} computed in-graph.
+        """
+        hp = bucket_pow2(h) if self.mode == "bucketed" else h
+        lrs = jnp.asarray([lr_fn(t + i) for i in range(hp)], jnp.float32)
+        fn = self._program(hp)
+        args = []
+        if self._synth is None:
+            # only the h valid steps' batches are real; masked steps never
+            # read theirs (lax.cond), so pad by repeating the last batch —
+            # this skips the numpy synthesis of the hp - h pad batches (the
+            # [Hp, ...] transfer itself is inherent to the fixed-shape
+            # program)
+            per_step = [make_train_batch(self.cfg, self.stream, t + i,
+                                         self.workers, self.b_loc, self.seq)
+                        for i in range(h)]
+            per_step += [per_step[-1]] * (hp - h)
+            args.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_step))
+        else:
+            args.append(jnp.int32(t))
+        args.append(lrs)
+        if self.mode == "bucketed":
+            args.append(jnp.arange(hp) < h)
+        state, metrics = fn(state, *args)
+        self.h_trace.append((t, h))
+        return state, metrics
+
+    # -- checkpointing ----------------------------------------------------
+
+    def save(self, path: str, state: Pytree, *, step: int) -> None:
+        """Checkpoint state + the engine's step / H-trace so a resumed run
+        lands exactly on the next round boundary."""
+        ckpt_io.save(path, state, step=step,
+                     extra={"h_trace": [[t, h] for t, h in self.h_trace]})
+
+    def restore(self, path: str, like_state: Pytree) -> tuple[Pytree, int]:
+        state, step, extra = ckpt_io.restore_with_meta(path, like_state)
+        trace = [(int(t), int(h)) for t, h in extra.get("h_trace", [])]
+        step = int(step or 0)
+        if trace:
+            done = trace[-1][0] + trace[-1][1]
+            assert done == step, (
+                f"checkpoint step {step} is not the round boundary implied by "
+                f"its H-trace (ends at {done})")
+        self.h_trace = trace
+        return state, step

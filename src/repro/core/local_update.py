@@ -66,10 +66,13 @@ def make_loss(cfg, run_cfg):
     return partial(mod.loss_fn, cfg, remat=remat, **kw)
 
 
-def make_local_step(cfg, run_cfg):
+def make_local_step(cfg, run_cfg, *, with_metrics: bool = False):
     """One per-worker optimizer step: NO cross-worker communication.
 
     state leaves have leading worker axis W; batch leaves have leading W.
+    With `with_metrics=True` the step returns (state, (loss, grad_norm))
+    where grad_norm is the worker-mean global gradient L2 norm — computed
+    in-graph so the RoundEngine can log it without a second backward pass.
     """
     loss_fn = make_loss(cfg, run_cfg)
     opt = make_optimizer(run_cfg)
@@ -112,7 +115,13 @@ def make_local_step(cfg, run_cfg):
                 state["params"], batch)
         # optimizer update is elementwise -> applies across the W axis as-is
         params, opt_state = opt.update(state["params"], state["opt"], grads, lr)
-        return {**state, "params": params, "opt": opt_state}, jnp.mean(losses)
+        new_state = {**state, "params": params, "opt": opt_state}
+        if not with_metrics:
+            return new_state, jnp.mean(losses)
+        sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)),
+                         axis=tuple(range(1, g.ndim)))
+                 for g in jax.tree.leaves(grads))       # [W]
+        return new_state, (jnp.mean(losses), jnp.mean(jnp.sqrt(sq)))
 
     return local_step
 

@@ -26,6 +26,14 @@ from typing import Callable, Iterator
 
 LrFn = Callable[[int], float]
 
+# The single source of truth for every H-schedule this repo implements.
+# CLI `--schedule` choices, RunConfig docs, and tests all derive from this
+# list so a new schedule can't be added in one place and forgotten elsewhere.
+SCHEDULE_KINDS: tuple[str, ...] = (
+    "qsr", "constant", "parallel", "postlocal", "inverse", "cubic", "swap",
+    "linear_inc", "dec_sqrt",
+)
+
 
 def _eta_for_round(run_cfg, t: int, lr_fn: LrFn) -> float:
     # During warmup, use the lr right after warmup (paper §2, "Dealing with
@@ -38,6 +46,11 @@ def get_h(run_cfg, t: int, lr_fn: LrFn) -> int:
     total = run_cfg.total_steps
     kind = run_cfg.schedule
     eta = _eta_for_round(run_cfg, t, lr_fn)
+    # The warmup pin (§2) applies to the *round*, not just eta: t-dependent
+    # schedules (postlocal/swap/linear_inc/dec_sqrt) also see the first
+    # post-warmup step while t < warmup_steps.  Truncation below still uses
+    # the real t.
+    tp = max(t, run_cfg.warmup_steps)
     if kind == "parallel":
         h = 1
     elif kind == "constant":
@@ -49,19 +62,19 @@ def get_h(run_cfg, t: int, lr_fn: LrFn) -> int:
     elif kind == "cubic":
         h = max(run_cfg.h_base, int((run_cfg.rho / eta) ** 3))
     elif kind == "postlocal":
-        h = 1 if t < run_cfg.switch_frac * total else run_cfg.h_base
+        h = 1 if tp < run_cfg.switch_frac * total else run_cfg.h_base
     elif kind == "swap":
         t0 = int(run_cfg.switch_frac * total)
-        h = run_cfg.h_base if t < t0 else (total - t)
+        h = run_cfg.h_base if tp < t0 else (total - tp)
     elif kind == "linear_inc":
         # Haddadpour et al. 2019: H grows linearly as training proceeds
-        h = run_cfg.h_base * (1 + int(4 * t / max(total, 1)))
+        h = run_cfg.h_base * (1 + int(4 * tp / max(total, 1)))
     elif kind == "dec_sqrt":
         # Wang & Joshi 2019: start with infrequent sync, decrease H
         h0 = 8 * run_cfg.h_base
-        h = max(1, int(h0 / math.sqrt(1.0 + 8.0 * t / max(total, 1))))
+        h = max(1, int(h0 / math.sqrt(1.0 + 8.0 * tp / max(total, 1))))
     else:
-        raise ValueError(f"unknown schedule {kind!r}")
+        raise ValueError(f"unknown schedule {kind!r}; known: {SCHEDULE_KINDS}")
     return max(1, min(h, total - t))  # truncate the final round (§2)
 
 

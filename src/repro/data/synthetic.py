@@ -76,6 +76,53 @@ class VisionStream:
         return jnp.asarray(x), jnp.asarray(y, jnp.int32)
 
 
+def device_batch_fn(cfg, stream: TokenStream, w: int, b_loc: int, seq: int):
+    """Jittable on-device batch synthesis: `synth(step) -> batch [W, B, ...]`.
+
+    Runs the same order-1 Markov process as `TokenStream.batch` (identical
+    transition table and noise rate) but drives it with counter-based
+    `jax.random.fold_in` keys, so it is deterministic in (seed, step) and can
+    be traced *inside* the jitted round program — no host-side `jnp.stack`
+    of `[H, W, B, S]` arrays and no host->device transfer per round.  The
+    draws differ from the numpy stream (different RNG), so the two paths
+    yield the same language, not the same batches.
+    """
+    succ = jnp.asarray(stream.succ, jnp.int32)          # [vocab, branch]
+    vocab, branch, noise = stream.vocab, stream.branch, stream.noise
+    base = jax.random.PRNGKey(stream.seed)
+
+    def synth(step):
+        key = jax.random.fold_in(base, step)
+        k0, kb, kf, kn, kv, ka = jax.random.split(key, 6)
+        tok0 = jax.random.randint(k0, (w, b_loc), 0, vocab)
+
+        def body(tok, ks):
+            kb_i, kf_i, kn_i = ks
+            nxt = succ[tok, jax.random.randint(kb_i, (w, b_loc), 0, branch)]
+            flip = jax.random.uniform(kf_i, (w, b_loc)) < noise
+            nxt = jnp.where(flip,
+                            jax.random.randint(kn_i, (w, b_loc), 0, vocab),
+                            nxt)
+            return nxt, nxt
+
+        keys = (jax.random.split(kb, seq), jax.random.split(kf, seq),
+                jax.random.split(kn, seq))
+        _, outs = jax.lax.scan(body, tok0, keys)
+        labels = jnp.moveaxis(outs, 0, -1)              # [W, B, S]
+        tokens = jnp.concatenate([tok0[..., None], labels[..., :-1]], -1)
+        batch = {"tokens": tokens.astype(jnp.int32),
+                 "labels": labels.astype(jnp.int32)}
+        if cfg.family == "vlm":
+            batch["prefix_embeds"] = 0.02 * jax.random.normal(
+                kv, (w, b_loc, cfg.n_img_tokens, cfg.d_model))
+        if cfg.family == "audio":
+            batch["frames"] = 0.1 * jax.random.normal(
+                ka, (w, b_loc, cfg.enc_seq, cfg.d_model))
+        return batch
+
+    return synth
+
+
 def make_train_batch(cfg, stream: TokenStream, step: int, w: int, b_loc: int,
                      seq: int, rng_extra: int = 0):
     """Stacked per-worker batch [W, B_loc, ...] for the local-gradient runtime."""

@@ -27,14 +27,15 @@ from repro.launch.shapes import SHAPES, build_case
 
 def run_one(arch, shape, *, multi_pod, policy=None,
             parallel_baseline=False, run_cfg=None,
-            verbose=True):
+            engine="legacy", verbose=True):
     from repro.configs import registry as R
 
     policy = policy or R.get_policy(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
     case = build_case(arch, shape, mesh, policy=policy,
-                      run_cfg=run_cfg, parallel_baseline=parallel_baseline)
+                      run_cfg=run_cfg, parallel_baseline=parallel_baseline,
+                      engine=engine)
     t0 = time.time()
     with mesh:
         jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
@@ -50,6 +51,7 @@ def run_one(arch, shape, *, multi_pod, policy=None,
         "steps_per_program": case.meta.get("steps_per_program", 1),
         "workers": case.meta.get("w"),
         "h": case.meta.get("h"),
+        "hp": case.meta.get("hp"),
         "ring": case.meta.get("ring"),
         "kv_len": case.meta.get("kv_len"),
         "compile_s": round(t1 - t0, 1),
@@ -75,6 +77,10 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--parallel-baseline", action="store_true")
+    ap.add_argument("--engine", default="legacy",
+                    choices=["legacy", "bucketed"],
+                    help="train_round flavor to lower: the seed's exact-H "
+                         "program or the RoundEngine's padded+masked bucket")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -92,7 +98,8 @@ def main() -> None:
                 try:
                     records.append(run_one(arch, shape, multi_pod=mp,
                                            policy=args.policy,
-                                           parallel_baseline=args.parallel_baseline))
+                                           parallel_baseline=args.parallel_baseline,
+                                           engine=args.engine))
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     failures.append({"arch": arch, "shape": shape,

@@ -110,7 +110,8 @@ class Case:
 
 def build_case(arch: str, shape_name: str, mesh, *, policy: str,
                run_cfg: RunConfig | None = None, h: int | None = None,
-               parallel_baseline: bool = False) -> Case:
+               parallel_baseline: bool = False,
+               engine: str = "legacy") -> Case:
     from repro.configs import registry as R
 
     cfg = R.get_config(arch)
@@ -125,7 +126,7 @@ def build_case(arch: str, shape_name: str, mesh, *, policy: str,
             return _train_parallel_case(cfg, run_cfg, shape, mesh, policy,
                                         dtype, sizes)
         return _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype,
-                                 sizes, h or run_cfg.h_base)
+                                 sizes, h or run_cfg.h_base, engine=engine)
     if shape.mode == "prefill":
         return _prefill_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes)
     return _decode_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes,
@@ -136,7 +137,12 @@ def build_case(arch: str, shape_name: str, mesh, *, policy: str,
 # Training cases
 # --------------------------------------------------------------------------
 
-def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h):
+def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
+                      *, engine: str = "legacy"):
+    """engine="legacy": the seed's exact-H `train_round`.
+    engine="bucketed": the RoundEngine's padded program — batches/lrs padded
+    to the power-of-two bucket Hp plus a replicated [Hp] validity mask; the
+    lowered unit is then exactly what production runs per round."""
     w = pm.worker_count(policy, mesh)
     waxes = pm.worker_mesh_axes(policy, mesh)
     waxes = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
@@ -144,13 +150,31 @@ def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h):
     b_loc = shape.global_batch // max(w, 1)
     inner_data = "data" if policy == "fsdp" and _div(b_loc, sizes.get("data", 1)) else None
 
-    state = _abstract_state(cfg, run_cfg, w, dtype)
-    batches = _batch_abstract(cfg, (h, w, b_loc), shape.seq_len)
-    lrs = SDS((h,), jnp.float32)
-
     sspec = _state_specs(cfg, run_cfg, policy, mesh)
     bspec = _batch_specs(cfg, 1, waxes, inner_data)
+    state = _abstract_state(cfg, run_cfg, w, dtype)
 
+    if engine == "bucketed":
+        from repro.core.engine import bucket_pow2, make_bucketed_round
+        hp = bucket_pow2(h)
+        batches = _batch_abstract(cfg, (hp, w, b_loc), shape.seq_len)
+        lrs = SDS((hp,), jnp.float32)
+        mask = SDS((hp,), jnp.bool_)
+        round_fn = make_bucketed_round(cfg, run_cfg)
+        mspec = {"loss": P(), "grad_norm": P(), "divergence": P()}
+        in_sh = (_ns(mesh, sspec), _ns(mesh, bspec), NamedSharding(mesh, P()),
+                 NamedSharding(mesh, P()))
+        out_sh = (_ns(mesh, sspec), _ns(mesh, mspec))
+        # steps_per_program counts *real* (unmasked) steps so per-step cost
+        # normalization stays comparable with the legacy case; the padded
+        # scan length rides along as "hp"
+        return Case(round_fn, (state, batches, lrs, mask), in_sh, out_sh,
+                    meta={"cfg": cfg, "w": w, "b_loc": b_loc, "h": h,
+                          "hp": hp, "fn_name": "train_round_bucketed",
+                          "steps_per_program": h})
+
+    batches = _batch_abstract(cfg, (h, w, b_loc), shape.seq_len)
+    lrs = SDS((h,), jnp.float32)
     round_fn = LU.make_train_round(cfg, run_cfg)
     in_sh = (_ns(mesh, sspec), _ns(mesh, bspec), NamedSharding(mesh, P()))
     out_sh = (_ns(mesh, sspec), NamedSharding(mesh, P()))

@@ -1,9 +1,17 @@
-"""Training driver: Local OPT with any H-schedule (paper Alg. 2) or the
-data-parallel baseline (Alg. 1).
+"""Training driver: a thin host loop over `repro.core.engine.RoundEngine`.
 
-Runs end-to-end on CPU at smoke scale (examples/quickstart.py) and lowers
-unchanged on the production mesh.  The host loop owns the H-schedule: each
-communication round jit-executes `train_round` with that round's H.
+The engine owns compilation (power-of-two H-bucketed compile cache —
+O(log H_max) XLA programs for a full QSR schedule instead of one per
+distinct H), buffer donation, in-graph telemetry (loss / grad norm / worker
+divergence), and the data path (on-device fold_in batch synthesis by
+default; `--data host` for the numpy stream).  This file only walks the
+H-schedule: ask `schedules.get_h` for the next round's period, hand the
+round to the engine, log, checkpoint.
+
+Both of the paper's algorithms run through the same engine: Local OPT with
+any H-schedule (Alg. 2) and the data-parallel baseline (Alg. 1 ==
+`--schedule parallel`, i.e. H=1 every round).  `--engine legacy` is the
+escape hatch back to one-compile-per-distinct-H exact rounds.
 
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b --smoke \
       --schedule qsr --steps 200 --workers 4
@@ -11,64 +19,68 @@ communication round jit-executes `train_round` with that round's H.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import io as ckpt_io
 from repro.configs.base import RunConfig
-from repro.core import local_update as LU
 from repro.core import schedules
-from repro.data.synthetic import TokenStream, make_train_batch
-from repro.models import api, param as pm
+from repro.core.engine import RoundEngine
 from repro.optim.lr import make_lr_fn
 
 
 def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
           seed: int = 0, ckpt_dir: str | None = None, log_every: int = 1,
-          eval_fn=None):
-    mod = api.get_module(cfg)
-    params = pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(seed),
-                            jnp.float32)
-    state = LU.init_state(cfg, run_cfg, params, workers)
+          engine: str = "bucketed", data: str = "device", eval_fn=None,
+          eng: RoundEngine | None = None):
+    """Run a full training run; returns (state, history).
+
+    history rows are (t_end, h, loss, lr) — unchanged from the pre-engine
+    driver so downstream plots/tests keep working.  Pass an `eng` to keep a
+    handle on the engine (compile stats, H-trace) after the run; otherwise
+    one is built from the `engine`/`data` mode flags.
+    """
+    if eng is None:
+        eng = RoundEngine(cfg, run_cfg, workers=workers, b_loc=b_loc,
+                          seq=seq, seed=seed, mode=engine, data=data)
+    else:
+        got = (eng.cfg, eng.run_cfg, eng.workers, eng.b_loc, eng.seq,
+               eng.seed, eng.mode, eng.data)
+        want = (cfg, run_cfg, workers, b_loc, seq, seed, engine, data)
+        assert got == want, \
+            "engine built with (cfg, run_cfg, workers, b_loc, seq, seed, " \
+            f"mode, data)={got},\ntrain() called with {want}"
+    state = eng.init_state()
     lr_fn = make_lr_fn(run_cfg)
-    stream = TokenStream(vocab=max(cfg.vocab, 2), seed=seed)
 
     step0 = 0
     if ckpt_dir and ckpt_io.exists(ckpt_dir):
-        state, step0 = ckpt_io.restore(ckpt_dir, state)
-        print(f"restored checkpoint at step {step0}")
-
-    round_cache: dict[int, any] = {}
-
-    def round_fn_for(h: int):
-        if h not in round_cache:
-            round_cache[h] = jax.jit(LU.make_train_round(cfg, run_cfg))
-        return round_cache[h]
+        state, step0 = eng.restore(ckpt_dir, state)
+        print(f"restored checkpoint at round boundary {step0} "
+              f"({len(eng.h_trace)} rounds done)")
 
     history = []
     t_start = time.time()
-    t = step0
+    t = saved_at = step0
     while t < run_cfg.total_steps:
         h = schedules.get_h(run_cfg, t, lr_fn)
-        batches = jax.tree.map(
-            lambda *xs: jnp.stack(xs),
-            *[make_train_batch(cfg, stream, t + i, workers, b_loc, seq)
-              for i in range(h)])
-        lrs = jnp.asarray([lr_fn(t + i) for i in range(h)], jnp.float32)
-        state, loss = round_fn_for(h)(state, batches, lrs)
+        state, m = eng.run_round(state, t, h, lr_fn)
         t += h
-        history.append((t, h, float(loss), lr_fn(t - 1)))
+        loss = float(m["loss"])
+        history.append((t, h, loss, lr_fn(t - 1)))
         if log_every and (len(history) % log_every == 0):
+            cs = eng.compile_stats()
             print(f"step {t:6d}  H {h:4d}  lr {lr_fn(t-1):.5f}  "
-                  f"loss {float(loss):.4f}  ({time.time()-t_start:.1f}s)")
+                  f"loss {loss:.4f}  |g| {float(m['grad_norm']):.3f}  "
+                  f"div {float(m['divergence']):.4f}  "
+                  f"compiles {cs['compiles']} (hits {cs['cache_hits']})  "
+                  f"({time.time()-t_start:.1f}s)")
+        if eval_fn is not None:
+            eval_fn(t, state)
         if ckpt_dir and t % max(run_cfg.total_steps // 4, 1) == 0:
-            ckpt_io.save(ckpt_dir, state, step=t)
-    if ckpt_dir:
-        ckpt_io.save(ckpt_dir, state, step=t)
+            eng.save(ckpt_dir, state, step=t)
+            saved_at = t
+    if ckpt_dir and saved_at != t:
+        eng.save(ckpt_dir, state, step=t)
     return state, history
 
 
@@ -79,9 +91,14 @@ def main():
     ap.add_argument("--arch", default="starcoder2-3b")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-runnable)")
+    # choices derive from the schedules module so CLI and core cannot drift
     ap.add_argument("--schedule", default="qsr",
-                    choices=["qsr", "constant", "inverse", "cubic",
-                             "postlocal", "swap", "parallel"])
+                    choices=list(schedules.SCHEDULE_KINDS))
+    ap.add_argument("--engine", default="bucketed",
+                    choices=["bucketed", "legacy"],
+                    help="bucketed: pow2 compile cache; legacy: per-H jit")
+    ap.add_argument("--data", default="device", choices=["device", "host"],
+                    help="batch synthesis inside the jitted round vs numpy")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--workers", type=int, default=4)
@@ -100,13 +117,23 @@ def main():
         total_steps=args.steps, peak_lr=args.peak_lr, alpha=args.alpha,
         h_base=args.h_base, warmup_steps=max(args.steps // 20, 1),
         remat=False)
+    eng = RoundEngine(cfg, run_cfg, workers=args.workers, b_loc=args.batch,
+                      seq=args.seq, mode=args.engine, data=args.data)
     state, hist = train(cfg, run_cfg, workers=args.workers, b_loc=args.batch,
-                        seq=args.seq, ckpt_dir=args.ckpt)
+                        seq=args.seq, ckpt_dir=args.ckpt, engine=args.engine,
+                        data=args.data, eng=eng)
     losses = [l for _, _, l, _ in hist]
+    if not losses:
+        print("nothing to do: checkpoint already at "
+              f"step {run_cfg.total_steps}")
+        return
     n_sync = len(hist)
+    cs = eng.compile_stats()
     print(f"\nfinal loss {losses[-1]:.4f}  (first {losses[0]:.4f}); "
           f"{n_sync} communication rounds for {args.steps} steps "
-          f"(comm volume {n_sync/args.steps:.1%} of data-parallel)")
+          f"(comm volume {n_sync/args.steps:.1%} of data-parallel); "
+          f"{cs['compiles']} XLA round programs "
+          f"(buckets {cs['programs']}, {cs['cache_hits']} cache hits)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,190 @@
+"""RoundEngine invariants: power-of-two bucketing semantics (masked rounds
+bitwise-match the legacy per-H path), the compile-count budget, schedule
+invariants for every kind, on-device batch synthesis, and the engine's
+checkpoint H-trace."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.configs.base import RunConfig
+from repro.core import engine as E
+from repro.core import schedules
+from repro.data.synthetic import TokenStream, device_batch_fn
+from repro.optim.lr import make_lr_fn
+
+
+def _run_cfg(**kw):
+    base = dict(schedule="qsr", optimizer="adamw", total_steps=24,
+                peak_lr=3e-3, end_lr=1e-6, warmup_steps=2, h_base=2,
+                alpha=0.001, remat=False, weight_decay=0.01)
+    base.update(kw)
+    return RunConfig(**base)
+
+
+# ---------------------------------------------------------------- buckets --
+
+def test_bucket_pow2():
+    assert [E.bucket_pow2(h) for h in (1, 2, 3, 4, 5, 7, 8, 9, 1000)] == \
+        [1, 2, 4, 4, 8, 8, 8, 16, 1024]
+
+
+def test_compile_budget_is_log_of_hmax():
+    """A full QSR schedule visits many distinct H but at most
+    ceil(log2 Hmax)+1 buckets — the acceptance bound for the engine."""
+    run = RunConfig(schedule="qsr", total_steps=93_838, peak_lr=0.008,
+                    end_lr=1e-6, warmup_steps=10_000, h_base=4, alpha=0.0175)
+    lr = make_lr_fn(run)
+    distinct = {h for _, h in schedules.rounds(run, lr)}
+    buckets = E.schedule_buckets(run, lr)
+    assert len(buckets) <= E.max_programs(run, lr)
+    assert len(buckets) < len(distinct) / 5  # the whole point of the engine
+
+
+# -------------------------------------------------- schedule invariants ---
+
+@pytest.mark.parametrize("kind", schedules.SCHEDULE_KINDS)
+def test_every_schedule_partitions_the_run(kind):
+    run = _run_cfg(schedule=kind, total_steps=500, warmup_steps=50, h_base=3)
+    lr = make_lr_fn(run)
+    rs = list(schedules.rounds(run, lr))
+    assert sum(h for _, h in rs) == run.total_steps
+    assert all(h >= 1 for _, h in rs)
+    t = 0
+    for ts, h in rs:
+        assert ts == t
+        t += h
+
+
+@pytest.mark.parametrize("kind", schedules.SCHEDULE_KINDS)
+def test_every_schedule_pins_h_during_warmup(kind):
+    """Paper §2: during warmup, H is the value of the first post-warmup
+    round — for eta-dependent AND t-dependent schedules."""
+    run = _run_cfg(schedule=kind, total_steps=1000, warmup_steps=200,
+                   h_base=3)
+    lr = make_lr_fn(run)
+    pinned = schedules.get_h(run, run.warmup_steps, lr)
+    for t in (0, 50, 199):
+        assert schedules.get_h(run, t, lr) == pinned, (kind, t)
+
+
+# ------------------------------------------------- bucketed == legacy -----
+
+def test_bucketed_rounds_bitwise_match_legacy():
+    """The acceptance identity: driving a full smoke run through the
+    bucketed engine (padded scans, masked steps) produces *bitwise* the same
+    state as the legacy per-H path on the same host batches, while compiling
+    only one program per power-of-two bucket."""
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = _run_cfg()
+    lr_fn = make_lr_fn(run)
+    trace = list(schedules.rounds(run, lr_fn))
+    assert any(E.bucket_pow2(h) != h for _, h in trace), \
+        "config must exercise a padded round"
+
+    eb = E.RoundEngine(cfg, run, workers=2, b_loc=2, seq=16,
+                       mode="bucketed", data="host")
+    el = E.RoundEngine(cfg, run, workers=2, b_loc=2, seq=16,
+                       mode="legacy", data="host")
+    sb, sl = eb.init_state(), el.init_state()
+    for t, h in trace:
+        sb, mb = eb.run_round(sb, t, h, lr_fn)
+        sl, ml = el.run_round(sl, t, h, lr_fn)
+        # loss to float32 tolerance (summation order differs over the pad)
+        np.testing.assert_allclose(float(mb["loss"]), float(ml["loss"]),
+                                   rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(sb), jax.tree.leaves(sl)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    assert eb.h_trace == trace == el.h_trace
+    n_buckets = len({E.bucket_pow2(h) for _, h in trace})
+    assert eb.compiles == len(eb.compile_stats()["programs"]) == n_buckets
+    # legacy compiled one program per distinct H
+    assert el.compiles == len({h for _, h in trace})
+
+
+def test_round_metrics_are_finite_and_divergence_positive():
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = _run_cfg(total_steps=4)
+    eng = E.RoundEngine(cfg, run, workers=2, b_loc=2, seq=16, data="host")
+    state, m = eng.run_round(eng.init_state(), 0, 3, make_lr_fn(run))
+    for k in ("loss", "grad_norm", "divergence"):
+        assert np.isfinite(float(m[k])), k
+    # divergence is measured pre-sync: workers saw different data, so > 0
+    assert float(m["divergence"]) > 0
+
+
+# ------------------------------------------------- device data path -------
+
+def test_device_batch_synthesis_deterministic_and_shifted():
+    cfg = R.get_smoke_config("starcoder2-3b")
+    stream = TokenStream(vocab=max(cfg.vocab, 2), seed=3)
+    synth = jax.jit(device_batch_fn(cfg, stream, w=2, b_loc=3, seq=8))
+    a, b = synth(5), synth(5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = synth(6)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))
+    # next-token labels: labels[t] is the symbol that follows tokens[t]
+    np.testing.assert_array_equal(np.asarray(a["tokens"])[..., 1:],
+                                  np.asarray(a["labels"])[..., :-1])
+    assert a["tokens"].shape == (2, 3, 8)
+    assert (np.asarray(a["tokens"]) >= 0).all()
+    assert (np.asarray(a["tokens"]) < cfg.vocab).all()
+
+
+def test_device_data_trains_and_caches_like_host():
+    """The in-graph data path runs the same Markov language: a few rounds
+    reduce the loss and reuse the bucketed compile cache."""
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = _run_cfg(schedule="constant", h_base=2, total_steps=16,
+                   warmup_steps=1)
+    lr_fn = make_lr_fn(run)
+    eng = E.RoundEngine(cfg, run, workers=2, b_loc=4, seq=16, data="device")
+    state = eng.init_state()
+    losses = []
+    for t, h in schedules.rounds(run, lr_fn):
+        state, m = eng.run_round(state, t, h, lr_fn)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert eng.compiles == 1 and eng.cache_hits == len(losses) - 1
+
+
+# ------------------------------------------------- checkpoint h-trace -----
+
+def test_engine_checkpoint_roundtrip_carries_h_trace():
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = _run_cfg(total_steps=8, warmup_steps=1)
+    lr_fn = make_lr_fn(run)
+    eng = E.RoundEngine(cfg, run, workers=2, b_loc=2, seq=16, data="host")
+    state = eng.init_state()
+    t = 0
+    while t < run.total_steps:
+        h = schedules.get_h(run, t, lr_fn)
+        state, _ = eng.run_round(state, t, h, lr_fn)
+        t += h
+    with tempfile.TemporaryDirectory() as d:
+        eng.save(d, state, step=t)
+        eng2 = E.RoundEngine(cfg, run, workers=2, b_loc=2, seq=16,
+                             data="host")
+        restored, step = eng2.restore(d, eng2.init_state())
+        assert step == t
+        assert eng2.h_trace == eng.h_trace
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_rejects_truncated_trace():
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = _run_cfg(total_steps=4, warmup_steps=1)
+    eng = E.RoundEngine(cfg, run, workers=2, b_loc=2, seq=16, data="host")
+    state = eng.init_state()
+    eng.h_trace = [(0, 2)]  # claims 2 steps done
+    with tempfile.TemporaryDirectory() as d:
+        eng.save(d, state, step=3)  # ...but the step says 3: not a boundary
+        with pytest.raises(AssertionError):
+            eng.restore(d, eng.init_state())

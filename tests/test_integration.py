@@ -26,7 +26,11 @@ def test_training_reduces_loss_qsr():
     run = RunConfig(schedule="qsr", optimizer="adamw", total_steps=40,
                     peak_lr=3e-3, alpha=0.0008, h_base=2, warmup_steps=4,
                     remat=False, weight_decay=0.01)
-    state, hist = train(cfg, run, workers=2, b_loc=4, seq=32, log_every=0)
+    # data="host": the numpy stream the 0.3-drop threshold was tuned on —
+    # bitwise the seed trajectory.  The on-device synthesis path is covered
+    # by tests/test_engine.py.
+    state, hist = train(cfg, run, workers=2, b_loc=4, seq=32, log_every=0,
+                        data="host")
     losses = [l for _, _, l, _ in hist]
     assert losses[-1] < losses[0] - 0.3, losses
     assert sum(h for _, h, _, _ in hist) == 40

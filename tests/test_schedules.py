@@ -3,6 +3,8 @@ reported communication volumes."""
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import RunConfig
