@@ -20,8 +20,8 @@ import numpy as np
 
 from repro.configs import registry as R
 from repro.configs.base import RunConfig
-from repro.core import local_update as LU
 from repro.core import schedules
+from repro.core.engine import RoundEngine
 from repro.data.synthetic import VisionStream
 from repro.models import api, param as pm
 from repro.optim.lr import make_lr_fn
@@ -36,24 +36,25 @@ def train_one(schedule: str, *, steps=300, k=8, b_loc=8, seed=0,
                     weight_decay=0.0)
     mod = api.get_module(cfg)
     params = pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(seed))
-    state = LU.init_state(cfg, run, params, k)
     lr_fn = make_lr_fn(run)
     stream = VisionStream(n_classes=cfg.n_classes, seed=123)
-    round_fn = jax.jit(LU.make_train_round(cfg, run))
 
+    def batch_fn(step):
+        xs, ys = zip(*[stream.batch(step, w, b_loc) for w in range(k)])
+        return {"images": jnp.stack(xs), "labels": jnp.stack(ys)}
+
+    # RoundEngine owns the compile cache (one program per power-of-two H
+    # bucket instead of one jit per distinct H) and the round loop unit.
+    eng = RoundEngine(cfg, run, workers=k, b_loc=b_loc, seq=1, seed=seed,
+                      data="host", batch_fn=batch_fn)
+    state = eng.init_state(params)
     t = 0
     while t < steps:
         h = schedules.get_h(run, t, lr_fn)
-        imgs, labels = [], []
-        for i in range(h):
-            xs, ys = zip(*[stream.batch(t + i, w, b_loc) for w in range(k)])
-            imgs.append(jnp.stack(xs)); labels.append(jnp.stack(ys))
-        batch = {"images": jnp.stack(imgs), "labels": jnp.stack(labels)}
-        lrs = jnp.asarray([lr_fn(t + i) for i in range(h)], jnp.float32)
-        state, _ = round_fn(state, batch, lrs)
+        state, _ = eng.run_round(state, t, h, lr_fn)
         t += h
 
-    final = jax.tree.map(lambda x: x[0], state["params"])
+    final = eng.params_single(state)
     # held-out accuracy (clean labels, unseen steps)
     accs, sharps = [], []
     loss_fn = jax.jit(lambda p, b: mod.loss_fn(cfg, p, b, remat=False))

@@ -55,6 +55,7 @@ def main() -> None:
 
     csv_rows: list = []
     table1_comm.run(csv_rows)
+    table1_comm.sync_lowering(csv_rows)
     table4_walltime.run(csv_rows)
     sde_drift.run(csv_rows)
     fast = os.environ.get("REPRO_BENCH_FAST", "1") == "1"

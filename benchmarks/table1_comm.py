@@ -4,12 +4,25 @@ ViT-B B=4096/16384 300ep; cosine+linear+step decay).
 
 Comm volume = rounds/steps relative to data-parallel (one all-reduce per
 step) — computed from the actual H-trace, compared against the paper's
-reported numbers."""
+reported numbers.
+
+`sync_lowering` adds the per-sync *lowering* axis the schedule math can't
+see: bytes on wire and collectives per sync for the tree vs flat param
+layouts, measured from compiled HLO by launch/hlo_analysis via the
+launch/sync_compare subprocess (it must pin the host device count before
+jax initializes, hence the shell-out)."""
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 from repro.configs.base import RunConfig
 from repro.core import schedules
 from repro.optim.lr import make_lr_fn
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 IMAGENET = 1_281_167
 
@@ -85,5 +98,49 @@ def run(csv_rows: list | None = None) -> None:
             assert abs(frac - paper) <= tol, (label, frac, paper)
 
 
+def sync_lowering(csv_rows: list | None = None, *,
+                  arch: str = "starcoder2-3b",
+                  meshes: tuple[str, ...] = ("8x1", "4x2")) -> None:
+    """Bytes-on-wire + collectives-per-sync, tree vs flat, per debug mesh.
+
+    8x1 is pure data-parallel: both layouts move identical bytes, flat in
+    one all-reduce per dtype bucket instead of one per leaf.  4x2 adds
+    model sharding: tree all-reduces shard-local bytes (and pays resharding
+    all-to-alls); flat trades that for the replicated buffer — the
+    per-tensor-sharding reason `--param-layout tree` stays the fsdp default.
+    """
+    print("\n== per-sync lowering: tree vs flat param layout "
+          f"({arch} smoke, dp policy) ==")
+    print(f"{'mesh':>6s} {'layout':>7s} {'all-reduces':>12s} "
+          f"{'collectives':>12s} {'bytes/sync':>12s} {'tensors':>8s}")
+    env = dict(os.environ, PYTHONPATH=_SRC +
+               os.pathsep + os.environ.get("PYTHONPATH", ""))
+    for mesh in meshes:
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.sync_compare",
+             "--arch", arch, "--mesh", mesh],
+            capture_output=True, text=True, env=env, timeout=600)
+        assert out.returncode == 0, out.stderr[-2000:]
+        rec = json.loads(out.stdout)
+        for layout in ("tree", "flat"):
+            r = rec[layout]
+            n_coll = sum(r["collective_counts"].values())
+            tensors = (f"{r['n_buckets']} bkts" if layout == "flat"
+                       else f"{r['n_leaves']} lvs")
+            print(f"{mesh:>6s} {layout:>7s} {r['all_reduce_ops']:12d} "
+                  f"{n_coll:12d} {r['bytes_on_wire']:12,d} {tensors:>8s}")
+            if csv_rows is not None:
+                csv_rows.append((f"table1_comm/sync_{mesh}_{layout}/"
+                                 f"all_reduces", "",
+                                 str(r["all_reduce_ops"])))
+                csv_rows.append((f"table1_comm/sync_{mesh}_{layout}/"
+                                 f"bytes_on_wire", "",
+                                 str(r["bytes_on_wire"])))
+        # the flat layout's contract, checked wherever the benchmark runs
+        assert rec["flat"]["all_reduce_ops"] == rec["flat"]["n_buckets"]
+        assert rec["tree"]["all_reduce_ops"] >= rec["tree"]["n_leaves"]
+
+
 if __name__ == "__main__":
     run()
+    sync_lowering()

@@ -3,10 +3,16 @@ data-parallel baseline on a noisy-teacher vision task (stand-in for
 ImageNet), K=8 workers.
 
   PYTHONPATH=src python examples/vit_local_adamw.py [--steps 300]
+      [--param-layout flat]
 
 Reproduces the qualitative Table 1(b) result at laptop scale: QSR trains
 with a fraction of the communication while matching or beating the
 data-parallel baseline's held-out accuracy.
+
+Runs through `RoundEngine` (core/engine.py): the VisionStream plugs in as a
+host-data `batch_fn`, the engine owns the power-of-two bucketed compile
+cache (no per-H jit), and `--param-layout flat` runs the same trajectory —
+bitwise — over FlatParamSpace dtype buckets.
 """
 import argparse
 import dataclasses
@@ -21,55 +27,57 @@ import numpy as np
 
 from repro.configs import registry as R
 from repro.configs.base import RunConfig
-from repro.core import local_update as LU
 from repro.core import schedules
+from repro.core.engine import RoundEngine
 from repro.data.synthetic import VisionStream
 from repro.models import api, param as pm
 from repro.optim.lr import make_lr_fn
 
 
-def run_one(schedule: str, steps: int, k=8, b_loc=8, seed=0):
+def run_one(schedule: str, steps: int, k=8, b_loc=8, seed=0, layout="tree"):
     cfg = dataclasses.replace(R.get_smoke_config("vit-b16"), n_classes=16)
     run = RunConfig(schedule=schedule, optimizer="adamw", total_steps=steps,
                     peak_lr=6e-3, end_lr=1e-5, warmup_steps=steps // 10,
                     h_base=2, alpha=3.5e-3, weight_decay=0.01, remat=False)
     mod = api.get_module(cfg)
     params = pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(seed))
-    state = LU.init_state(cfg, run, params, k)
     lr_fn = make_lr_fn(run)
     stream = VisionStream(n_classes=cfg.n_classes, seed=42)
-    round_fn = jax.jit(LU.make_train_round(cfg, run))
 
-    t, n_rounds = 0, 0
-    while t < steps:
+    def batch_fn(step):
+        xs, ys = zip(*[stream.batch(step, w, b_loc) for w in range(k)])
+        return {"images": jnp.stack(xs), "labels": jnp.stack(ys)}
+
+    eng = RoundEngine(cfg, run, workers=k, b_loc=b_loc, seq=1, seed=seed,
+                      data="host", batch_fn=batch_fn, layout=layout)
+    state = eng.init_state(params)
+    t, loss = 0, float("nan")
+    while t < run.total_steps:
         h = schedules.get_h(run, t, lr_fn)
-        imgs, labels = [], []
-        for i in range(h):
-            xs, ys = zip(*[stream.batch(t + i, w, b_loc) for w in range(k)])
-            imgs.append(jnp.stack(xs)); labels.append(jnp.stack(ys))
-        batch = {"images": jnp.stack(imgs), "labels": jnp.stack(labels)}
-        lrs = jnp.asarray([lr_fn(t + i) for i in range(h)], jnp.float32)
-        state, loss = round_fn(state, batch, lrs)
+        state, m = eng.run_round(state, t, h, lr_fn)
         t += h
-        n_rounds += 1
+        loss = float(m["loss"])
 
-    final = jax.tree.map(lambda x: x[0], state["params"])
+    final = eng.params_single(state)
     acc_fn = jax.jit(lambda p, b: mod.accuracy(cfg, p, b))
     accs = []
     for i in range(8):
         xs, ys = stream.batch(50_000 + i, 0, 64, noisy=False)
         accs.append(float(acc_fn(final, {"images": xs, "labels": ys})))
-    return float(np.mean(accs)), n_rounds / steps, float(loss)
+    return float(np.mean(accs)), len(eng.h_trace) / steps, loss
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=240)
+    ap.add_argument("--param-layout", default="tree",
+                    choices=["tree", "flat"])
     args = ap.parse_args()
     print(f"{'method':12s} {'heldout acc':>12s} {'comm volume':>12s} "
           f"{'final loss':>11s}")
     for sched in ("parallel", "constant", "qsr"):
-        acc, comm, loss = run_one(sched, args.steps)
+        acc, comm, loss = run_one(sched, args.steps,
+                                  layout=args.param_layout)
         print(f"{sched:12s} {acc:12.3f} {comm:12.1%} {loss:11.3f}")
 
 

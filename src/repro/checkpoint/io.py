@@ -47,6 +47,12 @@ def save(path: str, tree: Any, *, step: int | None = None,
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(payload, use_bin_type=True))
     os.replace(tmp, os.path.join(path, "state.msgpack"))
+    # small side file so read_meta() never has to unpack the state payload
+    tmp = os.path.join(path, "meta.msgpack.tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb({"step": step, "extra": extra or {}},
+                              use_bin_type=True))
+    os.replace(tmp, os.path.join(path, "meta.msgpack"))
 
 
 def restore(path: str, like: Any) -> tuple[Any, int | None]:
@@ -73,6 +79,19 @@ def restore_with_meta(path: str, like: Any) -> tuple[Any, int | None, dict]:
             out.append(got)
     return (jax.tree.unflatten(treedef, out), payload.get("step"),
             payload.get("extra") or {})
+
+
+def read_meta(path: str) -> tuple[int | None, dict]:
+    """(step, extra) from the small meta side file — e.g. to learn a
+    checkpoint's param layout before building the matching `like` tree.
+    Falls back to unpacking the full state payload for checkpoints written
+    before the side file existed."""
+    meta = os.path.join(path, "meta.msgpack")
+    src = meta if os.path.exists(meta) else os.path.join(path,
+                                                         "state.msgpack")
+    with open(src, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    return payload.get("step"), payload.get("extra") or {}
 
 
 def exists(path: str) -> bool:

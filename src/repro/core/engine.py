@@ -43,6 +43,16 @@ device round-trips): the loss and worker-mean global grad norm, each
 averaged over the round's valid steps, and the pre-sync worker divergence
 `mean_i ||x_i - x_bar||_2` — the quantity the paper's SDE analysis ties to
 the generalization benefit of large H.
+
+## Param layouts
+
+`layout="flat"` carries the run state as FlatParamSpace dtype buckets
+(core/flat.py) end-to-end: donation still applies (the state is just a
+smaller pytree of bigger buffers), telemetry reads norms off the flat
+buffers in one reduction per bucket, sync is one all-reduce per bucket, and
+the optimizer is one fused kernel per bucket.  Valid-step params match the
+tree layout bitwise (tests/test_flat.py); only the reduction *order* inside
+scalar metrics differs (per-bucket instead of per-leaf partial sums).
 """
 from __future__ import annotations
 
@@ -53,6 +63,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import io as ckpt_io
+from repro.core import flat
 from repro.core import local_update as LU
 from repro.core import schedules
 from repro.core.sync import make_sync
@@ -113,15 +124,21 @@ def _metrics(state, losses, gns, denom):
 # without an engine instance)
 # --------------------------------------------------------------------------
 
-def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None):
+def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None,
+                        spec=None):
     """Padded, masked communication round.
 
     Host data:   fn(state, batches [Hp, W, B, ...], lrs [Hp], mask [Hp])
     Device data: fn(state, t0 scalar, lrs [Hp], mask [Hp])  (synth given)
     -> (state, {"loss", "grad_norm", "divergence"}).
+
+    With `spec` (core.flat.FlatParamSpace) the state is flat dtype buckets
+    end-to-end: params/opt {bucket: [W, N]}, the sync one collective per
+    bucket, the telemetry one reduction per bucket.
     """
-    local_step = LU.make_local_step(cfg, run_cfg, with_metrics=True)
-    sync = make_sync(run_cfg)
+    local_step = LU.make_local_step(cfg, run_cfg, with_metrics=True,
+                                    spec=spec)
+    sync = make_sync(run_cfg, spec=spec)
 
     def body(st, get_batch, lr, valid):
         # lax.cond keeps the valid-step computation an isolated XLA
@@ -166,15 +183,16 @@ def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None):
     return round_fn
 
 
-def make_exact_round(cfg, run_cfg, synth: Callable | None = None):
+def make_exact_round(cfg, run_cfg, synth: Callable | None = None, spec=None):
     """Legacy exact-H round (one compile per distinct H) + engine telemetry.
 
     Same state arithmetic as `local_update.make_train_round`; kept as the
     escape hatch (`--engine legacy`) and the reference the bucketed path is
     tested bitwise against.
     """
-    local_step = LU.make_local_step(cfg, run_cfg, with_metrics=True)
-    sync = make_sync(run_cfg)
+    local_step = LU.make_local_step(cfg, run_cfg, with_metrics=True,
+                                    spec=spec)
+    sync = make_sync(run_cfg, spec=spec)
 
     def finish_exact(state, losses, gns):
         m = _metrics(state, losses, gns, jnp.float32(losses.shape[0]))
@@ -210,10 +228,17 @@ def make_exact_round(cfg, run_cfg, synth: Callable | None = None):
 class RoundEngine:
     """Owns the compile cache, run state, data source, and H-trace of a run.
 
-    mode:  "bucketed" (power-of-two compile cache, masked scan — default) |
-           "legacy"   (one program per distinct H — the seed behavior)
-    data:  "device" (in-graph fold_in batch synthesis — default) |
-           "host"   (numpy TokenStream, batches staged per round)
+    mode:   "bucketed" (power-of-two compile cache, masked scan — default) |
+            "legacy"   (one program per distinct H — the seed behavior)
+    data:   "device" (in-graph fold_in batch synthesis — default) |
+            "host"   (numpy TokenStream, batches staged per round)
+    layout: "tree" (state mirrors the model pytree — default) |
+            "flat" (state is a few dtype-bucketed [W, N] buffers, see
+            core/flat.py: one sync all-reduce and one optimizer kernel per
+            bucket instead of per leaf; bitwise-equal trajectories)
+    batch_fn: host-data override — `fn(step) -> batch [W, B_loc, ...]`
+            replacing the built-in TokenStream (e.g. a VisionStream source
+            for the paper's ViT runs).  Implies data="host".
 
     The data-parallel baseline (Alg. 1) is this same engine driven with the
     "parallel" schedule: every round has H=1, so workers sync (average) after
@@ -222,17 +247,27 @@ class RoundEngine:
 
     def __init__(self, cfg, run_cfg, *, workers: int, b_loc: int, seq: int,
                  seed: int = 0, mode: str = "bucketed", data: str = "device",
-                 donate: bool | None = None):
+                 layout: str = "tree", donate: bool | None = None,
+                 batch_fn: Callable | None = None):
         assert mode in ("bucketed", "legacy"), mode
         assert data in ("device", "host"), data
+        assert layout in ("tree", "flat"), layout
+        assert batch_fn is None or data == "host", \
+            "batch_fn is a host-data source; pass data='host'"
+        assert cfg.family != "vision" or (data == "host" and batch_fn), \
+            "vision configs need data='host' and an image batch_fn"
         self.cfg, self.run_cfg = cfg, run_cfg
         self.workers, self.b_loc, self.seq, self.seed = workers, b_loc, seq, seed
-        self.mode, self.data = mode, data
+        self.mode, self.data, self.layout = mode, data, layout
         # donation is a no-op warning on CPU; auto-enable elsewhere
         self.donate = (jax.default_backend() != "cpu") if donate is None else donate
         self.stream = TokenStream(vocab=max(cfg.vocab, 2), seed=seed)
         self._synth = (device_batch_fn(cfg, self.stream, workers, b_loc, seq)
                        if data == "device" else None)
+        self._host_batch = batch_fn or (
+            lambda step: make_train_batch(self.cfg, self.stream, step,
+                                          self.workers, self.b_loc, self.seq))
+        self.spec = None                           # FlatParamSpace (layout="flat")
         self._programs: dict[int, Any] = {}
         self.compiles = 0
         self.cache_hits = 0
@@ -240,14 +275,37 @@ class RoundEngine:
 
     # -- state ------------------------------------------------------------
 
+    def _ensure_spec(self, params_single: Pytree | None = None):
+        """The FlatParamSpace is recorded once, from the first params seen
+        (or the config's abstract params) — after that all flatten/unflatten
+        layout ops reuse it."""
+        if self.spec is None:
+            if params_single is None:
+                mod = api.get_module(self.cfg)
+                params_single = pm.abstract_params(mod.param_defs(self.cfg),
+                                                   jnp.float32)
+            self.spec = flat.FlatParamSpace(params_single)
+        return self.spec
+
     def init_state(self, params_single: Pytree | None = None) -> Pytree:
         if params_single is None:
             mod = api.get_module(self.cfg)
             params_single = pm.init_params(mod.param_defs(self.cfg),
                                            jax.random.PRNGKey(self.seed),
                                            jnp.float32)
-        return LU.init_state(self.cfg, self.run_cfg, params_single,
-                             self.workers)
+        state = LU.init_state(self.cfg, self.run_cfg, params_single,
+                              self.workers)
+        if self.layout == "flat":
+            state = flat.to_flat_state(self._ensure_spec(params_single), state)
+        return state
+
+    def params_single(self, state: Pytree) -> Pytree:
+        """Worker-0 params as the model pytree, whatever the layout — the
+        post-run handoff to eval/serving code."""
+        params = state["params"]
+        if self.layout == "flat":
+            params = self._ensure_spec().unflatten(params, lead=1)
+        return jax.tree.map(lambda x: x[0], params)
 
     # -- compilation ------------------------------------------------------
 
@@ -257,7 +315,8 @@ class RoundEngine:
             self.cache_hits += 1
             return self._programs[hp]
         make = make_bucketed_round if self.mode == "bucketed" else make_exact_round
-        fn = make(self.cfg, self.run_cfg, self._synth)
+        spec = self._ensure_spec() if self.layout == "flat" else None
+        fn = make(self.cfg, self.run_cfg, self._synth, spec)
         jit_kw = {"donate_argnums": (0,)} if self.donate else {}
         self._programs[hp] = jax.jit(fn, **jit_kw)
         self.compiles += 1
@@ -285,9 +344,7 @@ class RoundEngine:
             # this skips the numpy synthesis of the hp - h pad batches (the
             # [Hp, ...] transfer itself is inherent to the fixed-shape
             # program)
-            per_step = [make_train_batch(self.cfg, self.stream, t + i,
-                                         self.workers, self.b_loc, self.seq)
-                        for i in range(h)]
+            per_step = [self._host_batch(t + i) for i in range(h)]
             per_step += [per_step[-1]] * (hp - h)
             args.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_step))
         else:
@@ -305,10 +362,30 @@ class RoundEngine:
         """Checkpoint state + the engine's step / H-trace so a resumed run
         lands exactly on the next round boundary."""
         ckpt_io.save(path, state, step=step,
-                     extra={"h_trace": [[t, h] for t, h in self.h_trace]})
+                     extra={"h_trace": [[t, h] for t, h in self.h_trace],
+                            "layout": self.layout})
 
     def restore(self, path: str, like_state: Pytree) -> tuple[Pytree, int]:
-        state, step, extra = ckpt_io.restore_with_meta(path, like_state)
+        """Restore into this engine's layout.  A checkpoint written under
+        the other param layout is converted on the way in (flatten/unflatten
+        are exact, so resuming across layouts stays bitwise-faithful)."""
+        _, meta = ckpt_io.read_meta(path)
+        ck_layout = meta.get("layout", "tree")
+        like, spec = like_state, None
+        if ck_layout != self.layout:
+            # tree-layout engines derive the spec from the live state (its
+            # dtypes are authoritative); flat engines already carry one
+            spec = (flat.FlatParamSpace(
+                        jax.tree.map(lambda x: x[0], like_state["params"]))
+                    if self.layout == "tree" else self._ensure_spec())
+            like = (flat.to_tree_state(spec, like_state)
+                    if ck_layout == "tree"
+                    else flat.to_flat_state(spec, like_state))
+        state, step, extra = ckpt_io.restore_with_meta(path, like)
+        if spec is not None:
+            state = (flat.to_flat_state(spec, state)
+                     if self.layout == "flat"
+                     else flat.to_tree_state(spec, state))
         trace = [(int(t), int(h)) for t, h in extra.get("h_trace", [])]
         step = int(step or 0)
         if trace:

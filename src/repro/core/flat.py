@@ -1,0 +1,185 @@
+"""FlatParamSpace: the model pytree viewed as a few dtype-bucketed 1-D buffers.
+
+Why: the two hot paths of the local-gradient runtime pay per-*tensor* costs
+that a flat view eliminates.
+
+  * Sync (every H steps) is a worker mean over the params pytree — under
+    GSPMD that lowers to one all-reduce per leaf: hundreds of small,
+    latency-bound collectives on transformer configs.  Over a flat buffer it
+    is one all-reduce per dtype bucket (see launch/hlo_analysis
+    `collective_counts`, which proves the drop).
+  * The fused AdamW Pallas kernel launches once per leaf with per-leaf
+    padding to its block size.  Over the flat fp32 bucket it launches once
+    per local step, and pays at most one block of padding total.
+
+The spec is recorded once at init: leaves are taken in pytree
+(`jax.tree.flatten`) order and grouped into one contiguous 1-D buffer per
+leaf dtype ("the dtype-bucket rule": elementwise math and collectives need a
+homogeneous element type, and parameter dtypes are few — fp32 and/or bf16 —
+so the collective count drops from O(#leaves) to O(#dtypes)).  Flatten and
+unflatten are pure reshapes + concatenation/slices, so under XLA they fuse
+into layout ops: gradients taken *with respect to the flat buffer* are
+element-for-element identical to per-leaf gradients, which is what makes the
+flat layout bitwise-equivalent to the tree layout (tests/test_flat.py).
+
+Mirror trees (AdamW moments, SGD momentum, grads) share the params bucket
+assignment — their leaves land at the same offsets, in their own dtype — so
+`p[off:off+n]`, `m[off:off+n]`, `v[off:off+n]` always describe the same
+tensor.
+
+The tree layout remains available (`--param-layout tree`): it is the right
+tool when you need per-tensor stats (debugging which layer diverges), and it
+is currently the only layout for the fsdp policy (flat buffers keep the
+per-leaf inner sharding structure out of reach by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class _Leaf:
+    """One pytree leaf's placement inside its dtype bucket."""
+    bucket: str
+    index: int           # segment id within the bucket (bucket-local order)
+    offset: int          # element offset within the bucket buffer
+    size: int
+    shape: tuple[int, ...]
+
+
+class FlatParamSpace:
+    """Bidirectional view between a params pytree and dtype-bucketed buffers.
+
+    Built once from the (abstract or concrete) single-replica params; after
+    that, `flatten`/`unflatten` are pure layout ops.  `lead` counts leading
+    batch-like axes shared by every leaf (the runtime's worker axis W):
+    leaves `[*lead, *shape]` map to buffers `[*lead, N_bucket]`.
+    """
+
+    def __init__(self, tree: Pytree):
+        leaves, self.treedef = jax.tree.flatten(tree)
+        assert leaves, "empty params pytree"
+        self._leaves: list[_Leaf] = []
+        sizes: dict[str, int] = {}
+        order: dict[str, list[int]] = {}
+        for i, x in enumerate(leaves):
+            b = jnp.dtype(x.dtype).name
+            off = sizes.get(b, 0)
+            n = int(np.prod(x.shape, dtype=np.int64)) if x.shape else 1
+            self._leaves.append(_Leaf(b, len(order.setdefault(b, [])), off, n,
+                                      tuple(x.shape)))
+            order[b].append(i)
+            sizes[b] = off + n
+        self.buckets: tuple[str, ...] = tuple(sorted(sizes))
+        self.sizes: dict[str, int] = {b: sizes[b] for b in self.buckets}
+        self._order = order           # bucket -> leaf indices, offset order
+        self._seg: dict[str, np.ndarray] = {}
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self._leaves)
+
+    def bucket_leaves(self, bucket: str) -> int:
+        return len(self._order[bucket])
+
+    def segment_ids(self, bucket: str) -> np.ndarray:
+        """int32 [N_bucket]: which leaf (bucket-local index) each element of
+        the bucket buffer belongs to — the per-tensor reduction map."""
+        if bucket not in self._seg:
+            seg = np.empty(self.sizes[bucket], np.int32)
+            for i in self._order[bucket]:
+                lf = self._leaves[i]
+                seg[lf.offset:lf.offset + lf.size] = lf.index
+            self._seg[bucket] = seg
+        return self._seg[bucket]
+
+    # -- layout ops --------------------------------------------------------
+
+    def flatten(self, tree: Pytree, *, lead: int = 0) -> dict[str, jax.Array]:
+        """Pytree (leaves `[*lead, *shape]`, shapes matching the spec) ->
+        `{bucket: [*lead, N]}`.  Mirror trees may carry a different dtype
+        per leaf (e.g. fp32 moments of bf16 params); within a bucket all
+        mirror leaves must agree so the buffer stays homogeneous."""
+        leaves, treedef = jax.tree.flatten(tree)
+        assert treedef == self.treedef, (treedef, self.treedef)
+        out = {}
+        for b in self.buckets:
+            parts = []
+            for i in self._order[b]:
+                x = leaves[i]
+                lf = self._leaves[i]
+                assert tuple(x.shape[lead:]) == lf.shape, (x.shape, lf.shape)
+                parts.append(jnp.reshape(x, x.shape[:lead] + (lf.size,)))
+            out[b] = parts[0] if len(parts) == 1 else \
+                jnp.concatenate(parts, axis=lead)
+        return out
+
+    def unflatten(self, bufs: dict[str, jax.Array], *, lead: int = 0) -> Pytree:
+        """`{bucket: [*lead, N]}` -> pytree of `[*lead, *shape]` leaves."""
+        leaves: list[Any] = [None] * len(self._leaves)
+        for b in self.buckets:
+            buf = bufs[b]
+            for i in self._order[b]:
+                lf = self._leaves[i]
+                sl = jax.lax.slice_in_dim(buf, lf.offset, lf.offset + lf.size,
+                                          axis=lead)
+                leaves[i] = jnp.reshape(sl, buf.shape[:lead] + lf.shape)
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # -- per-tensor reductions over the flat buffer ------------------------
+
+    def segment_max(self, bucket: str, x: jax.Array) -> jax.Array:
+        """Per-leaf max of an `[N]` bucket-shaped array -> `[#leaves]`.
+        max is exact (no rounding), so this equals per-tensor `jnp.max`."""
+        return jax.ops.segment_max(x, jnp.asarray(self.segment_ids(bucket)),
+                                   num_segments=self.bucket_leaves(bucket))
+
+    def spread(self, bucket: str, per_leaf: jax.Array) -> jax.Array:
+        """Gather `[#leaves]` per-tensor values back to elements `[N]`."""
+        return per_leaf[jnp.asarray(self.segment_ids(bucket))]
+
+
+# --------------------------------------------------------------------------
+# Runtime-state conversion (the RoundEngine's layout="flat" entry points)
+# --------------------------------------------------------------------------
+
+_STACKED = ("m", "v", "mu")       # optimizer slots carrying the worker axis
+
+
+def spec_for_params(params_single: Pytree) -> FlatParamSpace:
+    return FlatParamSpace(params_single)
+
+
+def to_flat_state(spec: FlatParamSpace, state: Pytree) -> Pytree:
+    """Tree runtime state (local_update.init_state layout) -> flat state:
+    params/opt moments become `{bucket: [W, N]}`, the sync anchor and outer
+    momentum become `{bucket: [N]}`; scalars ride along unchanged."""
+    out = {"params": spec.flatten(state["params"], lead=1)}
+    out["opt"] = {k: (spec.flatten(v, lead=1) if k in _STACKED else v)
+                  for k, v in state["opt"].items()}
+    if "anchor" in state:
+        out["anchor"] = spec.flatten(state["anchor"])
+    if "outer_mu" in state:
+        out["outer_mu"] = spec.flatten(state["outer_mu"])
+    return out
+
+
+def to_tree_state(spec: FlatParamSpace, state: Pytree) -> Pytree:
+    """Inverse of `to_flat_state` (bitwise: slices of the concatenation)."""
+    out = {"params": spec.unflatten(state["params"], lead=1)}
+    out["opt"] = {k: (spec.unflatten(v, lead=1) if k in _STACKED else v)
+                  for k, v in state["opt"].items()}
+    if "anchor" in state:
+        out["anchor"] = spec.unflatten(state["anchor"])
+    if "outer_mu" in state:
+        out["outer_mu"] = spec.unflatten(state["outer_mu"])
+    return out

@@ -6,6 +6,11 @@ syncs.  A local step is a vmapped per-worker loss/grad + an elementwise
 optimizer update (no cross-worker collective by construction); sync is a
 W-axis mean -> one all-reduce every H steps.  `train_round` fuses H local
 steps (lax.scan) + sync into one jitted program — the unit the dry-run lowers.
+
+Param layouts: by default state mirrors the model pytree; with a
+`core.flat.FlatParamSpace` the same runtime carries params/optimizer state
+as a few dtype-bucketed [W, N] buffers (see core/flat.py) — one collective
+per bucket at sync, one fused optimizer kernel per bucket per step.
 """
 from __future__ import annotations
 
@@ -66,15 +71,27 @@ def make_loss(cfg, run_cfg):
     return partial(mod.loss_fn, cfg, remat=remat, **kw)
 
 
-def make_local_step(cfg, run_cfg, *, with_metrics: bool = False):
+def make_local_step(cfg, run_cfg, *, with_metrics: bool = False, spec=None):
     """One per-worker optimizer step: NO cross-worker communication.
 
     state leaves have leading worker axis W; batch leaves have leading W.
     With `with_metrics=True` the step returns (state, (loss, grad_norm))
     where grad_norm is the worker-mean global gradient L2 norm — computed
     in-graph so the RoundEngine can log it without a second backward pass.
+
+    With `spec` (a core.flat.FlatParamSpace) params/opt are flat dtype
+    buckets {bucket: [W, N]}: the loss sees the unflattened view (pure
+    slices/reshapes) and gradients are taken w.r.t. the flat buffers
+    directly — the transpose of a slice is a disjoint scatter, so each
+    element's gradient is bitwise the per-leaf gradient — and the optimizer
+    runs one fused update per bucket instead of one per leaf.
     """
-    loss_fn = make_loss(cfg, run_cfg)
+    tree_loss_fn = make_loss(cfg, run_cfg)
+    if spec is None:
+        loss_fn = tree_loss_fn
+    else:
+        def loss_fn(bufs, batch):
+            return tree_loss_fn(spec.unflatten(bufs), batch)
     opt = make_optimizer(run_cfg)
 
     mb = getattr(run_cfg, "microbatch", 1)

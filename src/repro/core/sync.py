@@ -8,37 +8,93 @@ Beyond-paper options (recorded separately in EXPERIMENTS.md §Perf):
   * outer Nesterov momentum on the sync delta (DiLoCo-style),
   * int8-quantized sync deltas (8x cross-pod DCI traffic reduction).
 Both require an `anchor` (the params at the previous sync) carried in state.
+
+Layouts (`make_sync(run_cfg, spec=...)`):
+  * tree (spec=None) — state mirrors the model pytree; the worker mean
+    lowers to one all-reduce per leaf and every quantize/momentum op
+    round-trips HBM separately.
+  * flat (spec=FlatParamSpace) — state holds one [W, N] buffer per dtype
+    bucket (core/flat.py); the mean is one all-reduce per bucket, and the
+    quantize + momentum + anchor math runs as one fused pass
+    (kernels/sync_update.py).  Per-tensor quantization scales are preserved
+    via the spec's segment reductions, keeping the two layouts bitwise-equal.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
+
 
 def worker_mean(tree):
     """Mean over the leading worker axis, broadcast back — lowers to a single
-    all-reduce over the worker mesh axes under GSPMD."""
+    all-reduce over the worker mesh axes under GSPMD (per leaf; per dtype
+    bucket when `tree` is a FlatParamSpace bucket dict)."""
     def one(x):
         m = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
         return jnp.broadcast_to(m, x.shape).astype(x.dtype)
     return jax.tree.map(one, tree)
 
 
-def _quantize_delta(delta, anchor_dtype):
+def _guarded_scale(amax):
+    """int8 scale from a max-|delta| statistic.  Guarded: an all-zero delta
+    keeps scale 1 so the round-trip is exactly zero.  (The previous
+    `amax + 1e-12` additive guard systematically shrank dequantized values
+    by amax/(amax+1e-12) — a 50% bias when amax ~ 1e-12.)"""
+    return jnp.where(amax > 0.0, amax, 1.0)
+
+
+def _quantize_delta(delta):
     """Symmetric per-tensor int8 quantization of the sync delta."""
     def one(d):
-        a = jnp.max(jnp.abs(d)) + 1e-12
+        a = _guarded_scale(jnp.max(jnp.abs(d)))
         q = jnp.clip(jnp.round(d / a * 127.0), -127, 127).astype(jnp.int8)
         return q.astype(jnp.float32) * (a / 127.0)
     return jax.tree.map(one, delta)
 
 
-def make_sync(run_cfg):
+def flat_delta_scales(spec, bucket: str, p, anchor):
+    """Per-tensor int8 scales for one flat bucket, spread to elements [N].
+
+    Identical statistics to the tree path: max|p - anchor| over the worker
+    axis and every element of each leaf (max is exact, so the segment
+    reduction matches per-leaf `jnp.max` bitwise)."""
+    d = jnp.max(jnp.abs(p.astype(jnp.float32)
+                        - anchor.astype(jnp.float32)[None]), axis=0)
+    return spec.spread(bucket, _guarded_scale(spec.segment_max(bucket, d)))
+
+
+def make_sync(run_cfg, spec=None):
     """Returns sync(state) -> state.  state = {"params", "opt", "anchor"?,
-    "outer_mu"?}; params carry a leading worker axis."""
+    "outer_mu"?}; params carry a leading worker axis.  With `spec` (a
+    core.flat.FlatParamSpace) the state is flat: params {bucket: [W, N]},
+    anchor/outer_mu {bucket: [N]}."""
     quantize = run_cfg.sync_quantize
     mom = run_cfg.outer_momentum
     outer_lr = 1.0
+
+    def sync_flat(state):
+        params = state["params"]
+        if not quantize and mom == 0.0:
+            return {**state, "params": worker_mean(params)}
+        anchor = state["anchor"]
+        new_state = dict(state)
+        new_params, new_anchor = {}, {}
+        new_mu = {} if mom > 0.0 else None
+        for b in spec.buckets:
+            p, a = params[b], anchor[b]
+            scale = flat_delta_scales(spec, b, p, a) if quantize else None
+            mu = state["outer_mu"][b] if mom > 0.0 else None
+            p2, a2, mu2 = kops.sync_flat_update(p, a, scale=scale, mu=mu,
+                                                momentum=mom)
+            new_params[b], new_anchor[b] = p2, a2
+            if mom > 0.0:
+                new_mu[b] = mu2
+        new_state["params"], new_state["anchor"] = new_params, new_anchor
+        if mom > 0.0:
+            new_state["outer_mu"] = new_mu
+        return new_state
 
     def sync(state):
         params = state["params"]
@@ -51,7 +107,7 @@ def make_sync(run_cfg):
             lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
             params, anchor)
         if quantize:
-            delta = _quantize_delta(delta, None)
+            delta = _quantize_delta(delta)
         mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
 
         new_state = dict(state)
@@ -72,4 +128,4 @@ def make_sync(run_cfg):
             new_anchor, params)
         return new_state
 
-    return sync
+    return sync_flat if spec is not None else sync

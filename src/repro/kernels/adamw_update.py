@@ -5,6 +5,12 @@ p, m, v are streamed through VMEM in 1D blocks; all five elementwise ops
 (two moment updates, bias correction, weight decay, parameter step) fuse
 into one pass, so HBM traffic is the roofline minimum (read p,m,v,g; write
 p,m,v) instead of one round-trip per op.
+
+Inputs may be any rank (the kernel flattens): under the tree layout the
+optimizer invokes this once per pytree leaf, paying up to one _BLOCK of
+padding and one kernel launch *per tensor*; under the flat layout
+(core/flat.py) it is invoked once per dtype bucket on the [W, N] buffer —
+one launch and at most one block of padding for the whole model.
 """
 from __future__ import annotations
 

@@ -66,6 +66,19 @@ def adamw_update(p, m, v, g, *, lr, beta1, beta2, eps, weight_decay, step):
                            interpret=(_BACKEND == "interpret"))
 
 
+def sync_flat_update(p, anchor, *, scale=None, mu=None, momentum: float = 0.0):
+    """Fused flat-bucket sync (delta -> int8 round-trip -> worker mean ->
+    Nesterov -> anchor/params) in one pass. Returns (new_p, new_anchor,
+    new_mu | None); see kernels/sync_update.py."""
+    if _BACKEND == "jnp":
+        return ref.sync_flat_update(p, anchor, scale=scale, mu=mu,
+                                    momentum=momentum)
+    from repro.kernels import sync_update as _k
+    return _k.sync_flat_update(p, anchor, scale=scale, mu=mu,
+                               momentum=momentum,
+                               interpret=(_BACKEND == "interpret"))
+
+
 def swiglu(x, wg, wi):
     """Fused silu(x@wg)*(x@wi) — the MLP hot spot."""
     if _BACKEND == "jnp":

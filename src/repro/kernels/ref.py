@@ -91,6 +91,30 @@ def adamw_update(p, m, v, g, *, lr, beta1, beta2, eps, weight_decay, step):
     return p1.astype(p.dtype), m1, v1
 
 
+def sync_flat_update(p, anchor, *, scale=None, mu=None, momentum=0.0):
+    """Fused flat-buffer sync update (core/sync.py flat path; one pass).
+
+    p [W, N] worker replicas of one dtype bucket; anchor [N] params at the
+    previous sync; scale [N] per-element (per-tensor, spread) int8 scales —
+    None disables quantization; mu [N] fp32 outer-momentum buffer — used iff
+    momentum > 0.  Returns (new_p [W, N], new_anchor [N], new_mu [N] | None).
+    Elementwise math identical to the per-leaf tree path in core/sync.py, so
+    the two layouts stay bitwise-equal (tests/test_flat.py).
+    """
+    d = p.astype(jnp.float32) - anchor.astype(jnp.float32)[None]
+    if scale is not None:
+        q = jnp.clip(jnp.round(d / scale[None] * 127.0), -127, 127)
+        d = q.astype(jnp.int8).astype(jnp.float32) * (scale[None] / 127.0)
+    step = jnp.mean(d, axis=0)
+    new_mu = None
+    if momentum > 0.0:
+        new_mu = momentum * mu + step
+        step = momentum * new_mu + step          # Nesterov
+    new_anchor = (anchor.astype(jnp.float32) + step).astype(anchor.dtype)
+    new_p = jnp.broadcast_to(new_anchor[None], p.shape).astype(p.dtype)
+    return new_p, new_anchor, new_mu
+
+
 def swiglu(x, wg, wi):
     """silu(x @ wg) * (x @ wi) in fp32, cast back to x.dtype."""
     xf = x.astype(jnp.float32)

@@ -27,7 +27,7 @@ from repro.launch.shapes import SHAPES, build_case
 
 def run_one(arch, shape, *, multi_pod, policy=None,
             parallel_baseline=False, run_cfg=None,
-            engine="legacy", verbose=True):
+            engine="legacy", layout="tree", verbose=True):
     from repro.configs import registry as R
 
     policy = policy or R.get_policy(arch)
@@ -35,7 +35,7 @@ def run_one(arch, shape, *, multi_pod, policy=None,
     n_dev = mesh.devices.size
     case = build_case(arch, shape, mesh, policy=policy,
                       run_cfg=run_cfg, parallel_baseline=parallel_baseline,
-                      engine=engine)
+                      engine=engine, layout=layout)
     t0 = time.time()
     with mesh:
         jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
@@ -52,6 +52,7 @@ def run_one(arch, shape, *, multi_pod, policy=None,
         "workers": case.meta.get("w"),
         "h": case.meta.get("h"),
         "hp": case.meta.get("hp"),
+        "layout": case.meta.get("layout", "tree"),
         "ring": case.meta.get("ring"),
         "kv_len": case.meta.get("kv_len"),
         "compile_s": round(t1 - t0, 1),
@@ -81,6 +82,12 @@ def main() -> None:
                     choices=["legacy", "bucketed"],
                     help="train_round flavor to lower: the seed's exact-H "
                          "program or the RoundEngine's padded+masked bucket")
+    ap.add_argument("--param-layout", default="tree",
+                    choices=["tree", "flat"],
+                    help="flat: lower the round over FlatParamSpace dtype "
+                         "buckets (requires --engine bucketed; the sync "
+                         "drops to one all-reduce per bucket — see "
+                         "collective_counts in the record)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -99,7 +106,8 @@ def main() -> None:
                     records.append(run_one(arch, shape, multi_pod=mp,
                                            policy=args.policy,
                                            parallel_baseline=args.parallel_baseline,
-                                           engine=args.engine))
+                                           engine=args.engine,
+                                           layout=args.param_layout))
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     failures.append({"arch": arch, "shape": shape,

@@ -3,7 +3,9 @@
  - FLOPs / bytes-accessed from compiled.cost_analysis()
  - per-device memory from compiled.memory_analysis()
  - collective bytes parsed from the optimized HLO text: operand sizes of
-   all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+   all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ - collective *counts* per kind (the latency axis): proves layout claims
+   like "flat sync = one all-reduce per dtype bucket, not per leaf".
 """
 from __future__ import annotations
 
@@ -58,18 +60,9 @@ def _crosses_pod(line: str, pod_size: int) -> bool | None:
     return None
 
 
-def collective_bytes(hlo_text: str, pod_size: int = 0) -> dict[str, int]:
-    """Sum *result* sizes of collective ops in the optimized HLO, per kind.
-
-    For all-reduce / all-to-all / collective-permute, result size == operand
-    size.  For all-gather the result is the gathered (full) tensor and for
-    reduce-scatter the operand is the full tensor; in both cases the bytes
-    that actually cross links per device are ~the full-tensor size x
-    (n-1)/n, so the full-tensor size is the right roofline input.  We report
-    the larger of (result, operands) per op.
-    """
-    out = {k: 0 for k in _COLLECTIVES}
-    out["dci"] = 0  # pod-crossing bytes (multi-pod meshes only)
+def _iter_collectives(hlo_text: str):
+    """Yield (kind, line, nbytes) for every collective op in the optimized
+    HLO, with start/done pairs reported once (on the -start line)."""
     for line in hlo_text.splitlines():
         s = line.strip()
         m = re.match(r"%?[\w\.\-]+\s*=\s*(.*)$", s)
@@ -93,10 +86,40 @@ def collective_bytes(hlo_text: str, pod_size: int = 0) -> dict[str, int]:
         head = rest.split(kind)[0]
         rshapes = _SHAPE_RE.findall(head)
         use = rshapes if rshapes else shapes
-        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in use)
+        yield kind, line, sum(_shape_bytes(dt, dims) for dt, dims in use)
+
+
+def collective_bytes(hlo_text: str, pod_size: int = 0) -> dict[str, int]:
+    """Sum *result* sizes of collective ops in the optimized HLO, per kind.
+
+    For all-reduce / all-to-all / collective-permute, result size == operand
+    size.  For all-gather the result is the gathered (full) tensor and for
+    reduce-scatter the operand is the full tensor; in both cases the bytes
+    that actually cross links per device are ~the full-tensor size x
+    (n-1)/n, so the full-tensor size is the right roofline input.  We report
+    the larger of (result, operands) per op.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["dci"] = 0  # pod-crossing bytes (multi-pod meshes only)
+    for kind, line, nbytes in _iter_collectives(hlo_text):
         out[kind] += nbytes
         if pod_size and _crosses_pod(line, pod_size):
             out["dci"] += nbytes
+    return out
+
+
+def collective_counts(hlo_text: str) -> dict[str, int]:
+    """Number of collective *ops* per kind (start/done pairs count once).
+
+    This is the latency/launch-overhead axis the byte totals miss: a sync
+    that moves the same bytes in one all-reduce per dtype bucket
+    (--param-layout flat) instead of one per pytree leaf issues O(#dtypes)
+    collectives instead of O(#leaves) — the acceptance measure for the flat
+    layout (see core/flat.py and tests/test_flat.py).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for kind, _, _ in _iter_collectives(hlo_text):
+        out[kind] += 1
     return out
 
 
@@ -118,6 +141,7 @@ def summarize(compiled, *, n_devices: int) -> dict:
             "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
         },
         "collective_bytes": coll,
+        "collective_counts": collective_counts(hlo),
         "collective_bytes_total": sum(v for k, v in coll.items()
                                       if k != "dci"),
         "dci_bytes": coll["dci"],

@@ -52,7 +52,13 @@ def _state_specs(cfg, run_cfg, policy, mesh):
         opt = {"mu": pspec, "step": P()}
     else:
         opt = {"m": pspec, "v": pspec, "step": P()}
-    return {"params": pspec, "opt": opt}
+    out = {"params": pspec, "opt": opt}
+    single = pm.param_specs(defs, policy, mesh)    # anchor: no worker axis
+    if run_cfg.sync_quantize or run_cfg.outer_momentum > 0.0:
+        out["anchor"] = single
+        if run_cfg.outer_momentum > 0.0:
+            out["outer_mu"] = single
+    return out
 
 
 def _abstract_state(cfg, run_cfg, w: int, dtype):
@@ -66,7 +72,54 @@ def _abstract_state(cfg, run_cfg, w: int, dtype):
     else:
         opt = {"m": jax.tree.map(f32, padd), "v": jax.tree.map(f32, padd),
                "step": SDS((), jnp.int32)}
-    return {"params": padd, "opt": opt}
+    out = {"params": padd, "opt": opt}
+    if run_cfg.sync_quantize or run_cfg.outer_momentum > 0.0:
+        out["anchor"] = pabs
+        if run_cfg.outer_momentum > 0.0:
+            out["outer_mu"] = jax.tree.map(f32, pabs)
+    return out
+
+
+def _flat_spec(cfg, dtype):
+    from repro.core.flat import FlatParamSpace
+    mod = api.get_module(cfg)
+    return FlatParamSpace(pm.abstract_params(mod.param_defs(cfg), dtype))
+
+
+def _abstract_flat_state(cfg, run_cfg, w: int, dtype, spec):
+    """Flat-layout runtime state: one [W, N] buffer per dtype bucket."""
+    bufs = lambda lead, dt=None: {
+        b: SDS(lead + (spec.sizes[b],), dt or jnp.dtype(b))
+        for b in spec.buckets}
+    if run_cfg.optimizer == "sgd":
+        opt = {"mu": bufs((w,), jnp.float32), "step": SDS((), jnp.int32)}
+    else:
+        opt = {"m": bufs((w,), jnp.float32), "v": bufs((w,), jnp.float32),
+               "step": SDS((), jnp.int32)}
+    out = {"params": bufs((w,)), "opt": opt}
+    if run_cfg.sync_quantize or run_cfg.outer_momentum > 0.0:
+        out["anchor"] = bufs(())
+        if run_cfg.outer_momentum > 0.0:
+            out["outer_mu"] = bufs((), jnp.float32)
+    return out
+
+
+def _flat_state_specs(run_cfg, waxes, spec):
+    """Shardings for the flat state: the worker axis over the worker mesh
+    axes; the flat dim replicated (flat targets the dp policy — the per-leaf
+    inner shardings of fsdp don't survive concatenation by construction)."""
+    bufs = lambda lead: {b: P(*(lead + (None,))) for b in spec.buckets}
+    wlead, alead = (waxes,), ()
+    if run_cfg.optimizer == "sgd":
+        opt = {"mu": bufs(wlead), "step": P()}
+    else:
+        opt = {"m": bufs(wlead), "v": bufs(wlead), "step": P()}
+    out = {"params": bufs(wlead), "opt": opt}
+    if run_cfg.sync_quantize or run_cfg.outer_momentum > 0.0:
+        out["anchor"] = bufs(alead)
+        if run_cfg.outer_momentum > 0.0:
+            out["outer_mu"] = bufs(alead)
+    return out
 
 
 def _batch_abstract(cfg, lead: tuple[int, ...], seq: int):
@@ -111,7 +164,7 @@ class Case:
 def build_case(arch: str, shape_name: str, mesh, *, policy: str,
                run_cfg: RunConfig | None = None, h: int | None = None,
                parallel_baseline: bool = False,
-               engine: str = "legacy") -> Case:
+               engine: str = "legacy", layout: str = "tree") -> Case:
     from repro.configs import registry as R
 
     cfg = R.get_config(arch)
@@ -126,7 +179,8 @@ def build_case(arch: str, shape_name: str, mesh, *, policy: str,
             return _train_parallel_case(cfg, run_cfg, shape, mesh, policy,
                                         dtype, sizes)
         return _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype,
-                                 sizes, h or run_cfg.h_base, engine=engine)
+                                 sizes, h or run_cfg.h_base, engine=engine,
+                                 layout=layout)
     if shape.mode == "prefill":
         return _prefill_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes)
     return _decode_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes,
@@ -138,11 +192,16 @@ def build_case(arch: str, shape_name: str, mesh, *, policy: str,
 # --------------------------------------------------------------------------
 
 def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
-                      *, engine: str = "legacy"):
+                      *, engine: str = "legacy", layout: str = "tree"):
     """engine="legacy": the seed's exact-H `train_round`.
     engine="bucketed": the RoundEngine's padded program — batches/lrs padded
     to the power-of-two bucket Hp plus a replicated [Hp] validity mask; the
-    lowered unit is then exactly what production runs per round."""
+    lowered unit is then exactly what production runs per round.
+    layout="flat" (bucketed only): the state is FlatParamSpace dtype buckets
+    — lowering this proves the per-sync all-reduce count is O(#buckets)."""
+    assert layout in ("tree", "flat"), layout
+    assert layout == "tree" or engine == "bucketed", \
+        "the flat layout runs through the RoundEngine's bucketed program"
     w = pm.worker_count(policy, mesh)
     waxes = pm.worker_mesh_axes(policy, mesh)
     waxes = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
@@ -150,9 +209,14 @@ def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
     b_loc = shape.global_batch // max(w, 1)
     inner_data = "data" if policy == "fsdp" and _div(b_loc, sizes.get("data", 1)) else None
 
-    sspec = _state_specs(cfg, run_cfg, policy, mesh)
+    spec = _flat_spec(cfg, dtype) if layout == "flat" else None
+    if layout == "flat":
+        sspec = _flat_state_specs(run_cfg, waxes, spec)
+        state = _abstract_flat_state(cfg, run_cfg, w, dtype, spec)
+    else:
+        sspec = _state_specs(cfg, run_cfg, policy, mesh)
+        state = _abstract_state(cfg, run_cfg, w, dtype)
     bspec = _batch_specs(cfg, 1, waxes, inner_data)
-    state = _abstract_state(cfg, run_cfg, w, dtype)
 
     if engine == "bucketed":
         from repro.core.engine import bucket_pow2, make_bucketed_round
@@ -160,7 +224,7 @@ def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
         batches = _batch_abstract(cfg, (hp, w, b_loc), shape.seq_len)
         lrs = SDS((hp,), jnp.float32)
         mask = SDS((hp,), jnp.bool_)
-        round_fn = make_bucketed_round(cfg, run_cfg)
+        round_fn = make_bucketed_round(cfg, run_cfg, spec=spec)
         mspec = {"loss": P(), "grad_norm": P(), "divergence": P()}
         in_sh = (_ns(mesh, sspec), _ns(mesh, bspec), NamedSharding(mesh, P()),
                  NamedSharding(mesh, P()))
@@ -171,7 +235,7 @@ def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
         return Case(round_fn, (state, batches, lrs, mask), in_sh, out_sh,
                     meta={"cfg": cfg, "w": w, "b_loc": b_loc, "h": h,
                           "hp": hp, "fn_name": "train_round_bucketed",
-                          "steps_per_program": h})
+                          "layout": layout, "steps_per_program": h})
 
     batches = _batch_abstract(cfg, (h, w, b_loc), shape.seq_len)
     lrs = SDS((h,), jnp.float32)
@@ -377,7 +441,8 @@ def with_depth(cfg, n_layers: int):
 
 
 def build_calib_case(cfg, shape_name: str, mesh, *, policy: str,
-                     run_cfg: RunConfig | None = None, fn_kind: str) -> Case:
+                     run_cfg: RunConfig | None = None, fn_kind: str,
+                     layout: str = "tree") -> Case:
     """Like build_case but for an explicitly-resized cfg and a specific
     sub-program: local_step | sync | parallel_step | prefill | decode."""
     shape = SHAPES[shape_name]
@@ -392,23 +457,34 @@ def build_calib_case(cfg, shape_name: str, mesh, *, policy: str,
         b_loc = shape.global_batch // max(w, 1)
         inner_data = ("data" if policy == "fsdp"
                       and _div(b_loc, sizes.get("data", 1)) else None)
-        state = _abstract_state(cfg, run_cfg, w, dtype)
-        sspec = _state_specs(cfg, run_cfg, policy, mesh)
+        spec = _flat_spec(cfg, dtype) if layout == "flat" else None
+        if layout == "flat":
+            state = _abstract_flat_state(cfg, run_cfg, w, dtype, spec)
+            sspec = _flat_state_specs(run_cfg, waxes, spec)
+        else:
+            state = _abstract_state(cfg, run_cfg, w, dtype)
+            sspec = _state_specs(cfg, run_cfg, policy, mesh)
         if fn_kind == "sync":
             from repro.core.sync import make_sync
-            sync = make_sync(run_cfg)
+            sync = make_sync(run_cfg, spec=spec)
             in_sh = (_ns(mesh, sspec),)
             return Case(sync, (state,), in_sh, _ns(mesh, sspec),
-                        meta={"cfg": cfg, "fn_name": "sync", "w": w})
+                        meta={"cfg": cfg, "fn_name": "sync", "w": w,
+                              "layout": layout,
+                              "n_leaves": (spec.n_leaves if spec else
+                                           len(jax.tree.leaves(
+                                               state["params"]))),
+                              "n_buckets": (len(spec.buckets) if spec
+                                            else None)})
         batch = _batch_abstract(cfg, (w, b_loc), shape.seq_len)
         bspec = _batch_specs(cfg, 0, waxes, inner_data)
-        step = LU.make_local_step(cfg, run_cfg)
+        step = LU.make_local_step(cfg, run_cfg, spec=spec)
         in_sh = (_ns(mesh, sspec), _ns(mesh, bspec), None)
         out_sh = (_ns(mesh, sspec), NamedSharding(mesh, P()))
         lr = SDS((), jnp.float32)
         return Case(step, (state, batch, lr), in_sh, out_sh,
                     meta={"cfg": cfg, "fn_name": "local_step", "w": w,
-                          "b_loc": b_loc})
+                          "b_loc": b_loc, "layout": layout})
     if fn_kind == "parallel_step":
         return _train_parallel_case(cfg, run_cfg, shape, mesh, policy, dtype,
                                     sizes)

@@ -1,0 +1,90 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "8")).strip()
+# ^ MUST run before any other import: jax locks the device count on first init.
+
+"""Tree-vs-flat sync lowering compared on a debug sharded mesh.
+
+Compiles the every-H-steps sync under both param layouts and reports, per
+layout, what the wire actually sees: collective op counts per kind
+(hlo_analysis.collective_counts — the latency/launch axis) and bytes on
+wire per sync (collective_bytes — the bandwidth axis).  This is the
+measurement behind the flat layout's acceptance claim: one all-reduce per
+dtype bucket instead of one per pytree leaf, same bytes.
+
+Run as a module (subprocess-safe: the device-count pin above must precede
+any jax init, so callers shell out rather than import):
+
+  PYTHONPATH=src python -m repro.launch.sync_compare \
+      --arch starcoder2-3b [--smoke] [--quantize] [--momentum 0.9]
+
+Prints one JSON object; benchmarks/table1_comm.py and tests/test_flat.py
+consume it.
+"""
+import argparse
+import json
+
+import jax
+
+from repro.configs.base import RunConfig
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.shapes import build_calib_case
+
+
+def compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
+            quantize: bool = False, momentum: float = 0.0,
+            n_data: int = 4, n_model: int = 2) -> dict:
+    """{layout: {collective_counts, collective_bytes, all_reduce_ops,
+    bytes_on_wire, n_leaves, n_buckets}} for the dp-policy sync."""
+    from repro.configs import registry as R
+
+    cfg = R.get_smoke_config(arch) if smoke else R.get_config(arch)
+    run_cfg = RunConfig(sharding="dp", sync_quantize=quantize,
+                        outer_momentum=momentum)
+    mesh = make_debug_mesh(n_data, n_model)
+    out = {}
+    for layout in ("tree", "flat"):
+        case = build_calib_case(cfg, "train_4k", mesh, policy="dp",
+                                run_cfg=run_cfg, fn_kind="sync",
+                                layout=layout)
+        with mesh:
+            compiled = jax.jit(case.fn, in_shardings=case.in_shardings,
+                               out_shardings=case.out_shardings
+                               ).lower(*case.args).compile()
+        hlo = compiled.as_text()
+        counts = hlo_analysis.collective_counts(hlo)
+        nbytes = hlo_analysis.collective_bytes(hlo)
+        out[layout] = {
+            "collective_counts": counts,
+            "collective_bytes": {k: v for k, v in nbytes.items() if v},
+            "all_reduce_ops": counts["all-reduce"],
+            "bytes_on_wire": sum(v for k, v in nbytes.items() if k != "dci"),
+            "n_leaves": case.meta["n_leaves"],
+            "n_buckets": case.meta["n_buckets"],
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--full", action="store_true",
+                    help="production config (default: smoke, CPU-runnable)")
+    ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--mesh", default="4x2",
+                    help="debug mesh data x model; 8x1 = pure dp, where the "
+                         "two layouts move identical bytes (with model "
+                         "sharding, tree all-reduces shard-local bytes)")
+    args = ap.parse_args()
+    n_data, n_model = (int(x) for x in args.mesh.split("x"))
+    print(json.dumps(compare(args.arch, smoke=not args.full,
+                             quantize=args.quantize,
+                             momentum=args.momentum,
+                             n_data=n_data, n_model=n_model)))
+
+
+if __name__ == "__main__":
+    main()

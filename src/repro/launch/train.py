@@ -30,25 +30,28 @@ from repro.optim.lr import make_lr_fn
 
 def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
           seed: int = 0, ckpt_dir: str | None = None, log_every: int = 1,
-          engine: str = "bucketed", data: str = "device", eval_fn=None,
+          engine: str = "bucketed", data: str = "device",
+          layout: str = "tree", eval_fn=None,
           eng: RoundEngine | None = None):
     """Run a full training run; returns (state, history).
 
     history rows are (t_end, h, loss, lr) — unchanged from the pre-engine
     driver so downstream plots/tests keep working.  Pass an `eng` to keep a
     handle on the engine (compile stats, H-trace) after the run; otherwise
-    one is built from the `engine`/`data` mode flags.
+    one is built from the `engine`/`data`/`layout` mode flags.
     """
     if eng is None:
         eng = RoundEngine(cfg, run_cfg, workers=workers, b_loc=b_loc,
-                          seq=seq, seed=seed, mode=engine, data=data)
+                          seq=seq, seed=seed, mode=engine, data=data,
+                          layout=layout)
     else:
         got = (eng.cfg, eng.run_cfg, eng.workers, eng.b_loc, eng.seq,
-               eng.seed, eng.mode, eng.data)
-        want = (cfg, run_cfg, workers, b_loc, seq, seed, engine, data)
+               eng.seed, eng.mode, eng.data, eng.layout)
+        want = (cfg, run_cfg, workers, b_loc, seq, seed, engine, data,
+                layout)
         assert got == want, \
             "engine built with (cfg, run_cfg, workers, b_loc, seq, seed, " \
-            f"mode, data)={got},\ntrain() called with {want}"
+            f"mode, data, layout)={got},\ntrain() called with {want}"
     state = eng.init_state()
     lr_fn = make_lr_fn(run_cfg)
 
@@ -99,6 +102,12 @@ def main():
                     help="bucketed: pow2 compile cache; legacy: per-H jit")
     ap.add_argument("--data", default="device", choices=["device", "host"],
                     help="batch synthesis inside the jitted round vs numpy")
+    ap.add_argument("--param-layout", default="tree",
+                    choices=["tree", "flat"],
+                    help="tree: state mirrors the model pytree (per-tensor "
+                         "stats); flat: dtype-bucketed 1-D buffers — one "
+                         "sync all-reduce and one optimizer kernel per "
+                         "bucket (core/flat.py), bitwise-equal training")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--workers", type=int, default=4)
@@ -118,10 +127,11 @@ def main():
         h_base=args.h_base, warmup_steps=max(args.steps // 20, 1),
         remat=False)
     eng = RoundEngine(cfg, run_cfg, workers=args.workers, b_loc=args.batch,
-                      seq=args.seq, mode=args.engine, data=args.data)
+                      seq=args.seq, mode=args.engine, data=args.data,
+                      layout=args.param_layout)
     state, hist = train(cfg, run_cfg, workers=args.workers, b_loc=args.batch,
                         seq=args.seq, ckpt_dir=args.ckpt, engine=args.engine,
-                        data=args.data, eng=eng)
+                        data=args.data, layout=args.param_layout, eng=eng)
     losses = [l for _, _, l, _ in hist]
     if not losses:
         print("nothing to do: checkpoint already at "

@@ -5,6 +5,14 @@ through `repro.kernels.ops.adamw_update` — the fused Pallas kernel on TPU,
 the jnp oracle elsewhere.  Optimizer state is a pytree mirroring params;
 with the local-gradient runtime a leading worker axis rides along
 transparently (updates are elementwise).
+
+Because every update is an elementwise `jax.tree.map`, the optimizers are
+layout-agnostic: under the flat layout (core/flat.py) `params` is a dict of
+a few dtype-bucketed [W, N] buffers, so the hot path collapses from one
+kernel launch per leaf (each padded to the Pallas block size) to one launch
+per dtype bucket per local step — at most one block of padding total, and
+per-element math (hence the trained params) bitwise-identical to the tree
+layout.
 """
 from __future__ import annotations
 
