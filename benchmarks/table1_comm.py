@@ -100,19 +100,25 @@ def run(csv_rows: list | None = None) -> None:
 
 def sync_lowering(csv_rows: list | None = None, *,
                   arch: str = "starcoder2-3b",
-                  meshes: tuple[str, ...] = ("8x1", "4x2")) -> None:
-    """Bytes-on-wire + collectives-per-sync, tree vs flat, per debug mesh.
+                  meshes: tuple[str, ...] = ("8x1", "4x2"),
+                  json_records: list | None = None) -> None:
+    """Bytes-on-wire + collectives-per-sync for all three param layouts.
 
-    8x1 is pure data-parallel: both layouts move identical bytes, flat in
-    one all-reduce per dtype bucket instead of one per leaf.  4x2 adds
-    model sharding: tree all-reduces shard-local bytes (and pays resharding
-    all-to-alls); flat trades that for the replicated buffer — the
-    per-tensor-sharding reason `--param-layout tree` stays the fsdp default.
+    8x1 is pure data-parallel: tree and flat move identical bytes, flat in
+    one all-reduce per dtype bucket instead of one per leaf, and
+    flat_sharded decomposes that all-reduce into one reduce_scatter + one
+    all_gather whose scatter leg lands 1/W of the bucket per device (the
+    `rs-leg` column — the ~W x drop that `--sync overlap` can then hide
+    behind the next round's compute).  4x2 adds model sharding: tree
+    all-reduces shard-local bytes (and pays resharding all-to-alls); flat
+    pays the replicated buffer; flat_sharded chunks the buffer over model
+    too, so its legs shrink by W x S.
     """
-    print("\n== per-sync lowering: tree vs flat param layout "
+    print("\n== per-sync lowering: tree vs flat vs flat_sharded "
           f"({arch} smoke, dp policy) ==")
-    print(f"{'mesh':>6s} {'layout':>7s} {'all-reduces':>12s} "
-          f"{'collectives':>12s} {'bytes/sync':>12s} {'tensors':>8s}")
+    print(f"{'mesh':>6s} {'layout':>12s} {'all-red':>8s} {'rs+ag':>6s} "
+          f"{'collectives':>12s} {'bytes/sync':>12s} {'rs-leg':>10s} "
+          f"{'tensors':>8s}")
     env = dict(os.environ, PYTHONPATH=_SRC +
                os.pathsep + os.environ.get("PYTHONPATH", ""))
     for mesh in meshes:
@@ -122,25 +128,53 @@ def sync_lowering(csv_rows: list | None = None, *,
             capture_output=True, text=True, env=env, timeout=600)
         assert out.returncode == 0, out.stderr[-2000:]
         rec = json.loads(out.stdout)
-        for layout in ("tree", "flat"):
+        if json_records is not None:
+            json_records.append({"mesh": mesh, "arch": arch, "sync": rec})
+        for layout in ("tree", "flat", "flat_sharded"):
             r = rec[layout]
             n_coll = sum(r["collective_counts"].values())
-            tensors = (f"{r['n_buckets']} bkts" if layout == "flat"
-                       else f"{r['n_leaves']} lvs")
-            print(f"{mesh:>6s} {layout:>7s} {r['all_reduce_ops']:12d} "
-                  f"{n_coll:12d} {r['bytes_on_wire']:12,d} {tensors:>8s}")
+            rs_ag = r["reduce_scatter_ops"] + r["all_gather_ops"]
+            tensors = (f"{r['n_leaves']} lvs" if layout == "tree"
+                       else f"{r['n_buckets']} bkts")
+            print(f"{mesh:>6s} {layout:>12s} {r['all_reduce_ops']:8d} "
+                  f"{rs_ag:6d} {n_coll:12d} {r['bytes_on_wire']:12,d} "
+                  f"{r['scatter_leg_bytes']:10,d} {tensors:>8s}")
             if csv_rows is not None:
-                csv_rows.append((f"table1_comm/sync_{mesh}_{layout}/"
-                                 f"all_reduces", "",
+                base = f"table1_comm/sync_{mesh}_{layout}"
+                csv_rows.append((f"{base}/all_reduces", "",
                                  str(r["all_reduce_ops"])))
-                csv_rows.append((f"table1_comm/sync_{mesh}_{layout}/"
-                                 f"bytes_on_wire", "",
+                csv_rows.append((f"{base}/bytes_on_wire", "",
                                  str(r["bytes_on_wire"])))
-        # the flat layout's contract, checked wherever the benchmark runs
+                if layout == "flat_sharded":
+                    csv_rows.append((f"{base}/scatter_leg_bytes", "",
+                                     str(r["scatter_leg_bytes"])))
+        # the layout contracts, checked wherever the benchmark runs
         assert rec["flat"]["all_reduce_ops"] == rec["flat"]["n_buckets"]
         assert rec["tree"]["all_reduce_ops"] >= rec["tree"]["n_leaves"]
+        sh = rec["flat_sharded"]
+        assert sh["all_reduce_ops"] == 0
+        assert sh["reduce_scatter_ops"] == sh["n_buckets"]
+        assert sh["all_gather_ops"] == sh["n_buckets"]
+        # scatter leg lands a strict fraction of the flat bucket bytes
+        assert sh["scatter_leg_bytes"] * 2 <= rec["flat"]["bytes_on_wire"]
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="write the sync-lowering records as JSON (the CI "
+                         "matrix uploads this as a build artifact)")
+    args = ap.parse_args()
+    records: list = []
+    run()
+    sync_lowering(json_records=records)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"records": records}, f, indent=1)
+        print(f"\nwrote {args.out}")
 
 
 if __name__ == "__main__":
-    run()
-    sync_lowering()
+    main()

@@ -3,6 +3,15 @@
 Round-trip-exact for any pytree of jnp arrays / numpy arrays / python
 scalars.  Layout: <dir>/state.msgpack (+ step metadata); arrays stored as
 {shape, dtype, data-bytes} — no pickle, stable across sessions.
+
+Flat param layouts (core/flat.py) checkpoint their buffers directly: one
+entry per dtype bucket instead of one per tensor, so a transformer's
+checkpoint holds a handful of contiguous buffers rather than hundreds of
+leaves.  `layout_meta` records the layout (and the sharded layout's chunk
+count) in the small meta side file; `read_meta` recovers it without
+unpacking the state payload, which is what lets the RoundEngine restore a
+checkpoint across layouts (tree <-> flat <-> flat_sharded) by rebuilding
+the matching spec first (core/engine.py `restore`).
 """
 from __future__ import annotations
 
@@ -53,6 +62,22 @@ def save(path: str, tree: Any, *, step: int | None = None,
         f.write(msgpack.packb({"step": step, "extra": extra or {}},
                               use_bin_type=True))
     os.replace(tmp, os.path.join(path, "meta.msgpack"))
+
+
+def layout_meta(layout: str, spec=None) -> dict:
+    """Param-layout fields for a checkpoint's `extra` dict.
+
+    For flat layouts the state's leaves ARE the dtype-bucket buffers; the
+    bucket names/sizes (and the sharded layout's chunk count — a different
+    shard count pads differently, so restore must rebuild the writer's
+    spec) are what a reader needs to reinterpret or convert them."""
+    out: dict = {"layout": layout}
+    if spec is not None:
+        out["buckets"] = {b: spec.sizes[b] for b in spec.buckets}
+        shards = getattr(spec, "shards", None)
+        if shards is not None:
+            out["shards"] = shards
+    return out
 
 
 def restore(path: str, like: Any) -> tuple[Any, int | None]:

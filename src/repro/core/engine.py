@@ -53,6 +53,30 @@ buffers in one reduction per bucket, sync is one all-reduce per bucket, and
 the optimizer is one fused kernel per bucket.  Valid-step params match the
 tree layout bitwise (tests/test_flat.py); only the reduction *order* inside
 scalar metrics differs (per-bucket instead of per-leaf partial sums).
+
+`layout="flat_sharded"` pads each bucket so it splits into per-device
+contiguous chunks (core/flat.py ShardedFlatSpace).  Under a sharded mesh
+the sync decomposes into one reduce_scatter + one all_gather per bucket
+(core/sync.py); in the host loop the same state layout runs the flat path
+on the padded buffers, bitwise-equal to tree/flat (tests/test_sharded.py).
+
+## Sync modes
+
+`sync="blocking"` (default): every round ends with the full sync — reduce,
+outer update, and broadcast in the round program, exactly Alg. 1/2.
+
+`sync="overlap"`: the round program ends with only the *reduce* half
+(core/sync.py make_sync_begin) and hands the engine a pending mean; the
+*gather/apply* half runs inside the NEXT round's program, after its first
+`overlap_depth` local steps — so the gather leg rides the wire while the
+next round's compute is already running.  Depth 0 applies the pending sync
+before the next round's first step: every local step then sees bitwise the
+params it would under blocking sync (the exactness mode; `flush()` aligns
+the final state).  Depth d > 0 lets workers run d steps on their own stale
+params and applies the consensus as a correction
+`x_i <- x_i + (consensus - x_i_at_boundary)` — local progress is kept, a
+beyond-paper staleness/overlap tradeoff recorded in
+benchmarks/table4_walltime.py rather than asserted.
 """
 from __future__ import annotations
 
@@ -66,7 +90,7 @@ from repro.checkpoint import io as ckpt_io
 from repro.core import flat
 from repro.core import local_update as LU
 from repro.core import schedules
-from repro.core.sync import make_sync
+from repro.core.sync import make_sync, make_sync_apply, make_sync_begin
 from repro.data.synthetic import TokenStream, device_batch_fn, make_train_batch
 from repro.models import api, common as cm, param as pm
 
@@ -124,6 +148,27 @@ def _metrics(state, losses, gns, denom):
 # without an engine instance)
 # --------------------------------------------------------------------------
 
+def _masked_body(local_step):
+    """Per-step masked executor shared by the bucketed/overlap rounds.
+
+    lax.cond keeps the valid-step computation an isolated XLA
+    subcomputation: valid steps stay bitwise-identical to the unpadded
+    program (a jnp.where select would perturb fusion at ulp level) and
+    masked steps skip their FLOPs instead of computing-and-discarding.
+    get_batch is called *inside* the taken branch so device-mode synthesis
+    is skipped on masked steps too (a closed-over batch value would be an
+    unconditionally-computed cond operand)."""
+    def body(st, get_batch, lr, valid):
+        def do(st):
+            st2, (loss, gn) = local_step(st, get_batch(), lr)
+            return st2, loss, gn
+        def skip(st):
+            return st, jnp.float32(0.0), jnp.float32(0.0)
+        st2, loss, gn = jax.lax.cond(valid, do, skip, st)
+        return st2, (loss, gn)
+    return body
+
+
 def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None,
                         spec=None):
     """Padded, masked communication round.
@@ -139,22 +184,7 @@ def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None,
     local_step = LU.make_local_step(cfg, run_cfg, with_metrics=True,
                                     spec=spec)
     sync = make_sync(run_cfg, spec=spec)
-
-    def body(st, get_batch, lr, valid):
-        # lax.cond keeps the valid-step computation an isolated XLA
-        # subcomputation: valid steps stay bitwise-identical to the unpadded
-        # program (a jnp.where select would perturb fusion at ulp level) and
-        # masked steps skip their FLOPs instead of computing-and-discarding.
-        # get_batch is called *inside* the taken branch so device-mode
-        # synthesis is skipped on masked steps too (a closed-over batch
-        # value would be an unconditionally-computed cond operand).
-        def do(st):
-            st2, (loss, gn) = local_step(st, get_batch(), lr)
-            return st2, loss, gn
-        def skip(st):
-            return st, jnp.float32(0.0), jnp.float32(0.0)
-        st2, loss, gn = jax.lax.cond(valid, do, skip, st)
-        return st2, (loss, gn)
+    body = _masked_body(local_step)
 
     def finish(state, losses, gns, mask):
         denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
@@ -221,6 +251,72 @@ def make_exact_round(cfg, run_cfg, synth: Callable | None = None, spec=None):
     return round_fn
 
 
+def make_overlap_round(cfg, run_cfg, synth: Callable | None = None,
+                       spec=None, *, depth: int = 0,
+                       apply_pending: bool = True):
+    """Bucketed round with the sync split across the round boundary.
+
+    Host data:   fn(state, pending?, batches [Hp, ...], lrs [Hp], mask [Hp])
+    Device data: fn(state, pending?, t0 scalar, lrs [Hp], mask [Hp])
+    -> (state, new_pending, metrics).  `pending?` is present iff
+    `apply_pending` (every round but the first).
+
+    The program: run the first min(depth, Hp) local steps on the stale
+    (pre-consensus) params, gather+apply the previous round's pending
+    reduce (exact assignment at depth 0; correction form otherwise), run
+    the remaining steps, and end with only the *reduce* half of this
+    round's sync — new_pending, handed to the next program.
+    """
+    local_step = LU.make_local_step(cfg, run_cfg, with_metrics=True,
+                                    spec=spec)
+    begin = make_sync_begin(run_cfg, spec=spec)
+    apply_ = make_sync_apply(run_cfg, spec=spec)
+    body = _masked_body(local_step)
+
+    if synth is None:
+        def step(st, xs):
+            batch, lr, valid = xs
+            return body(st, lambda: batch, lr, valid)
+    else:
+        def step(st, xs):
+            i, lr, valid = xs
+            return body(st, lambda: synth(i), lr, valid)
+
+    def segment(state, xs):
+        return jax.lax.scan(step, state, xs, unroll=cm.scan_unroll())
+
+    def round_fn(state, *args):
+        if apply_pending:
+            pending, *rest = args
+        else:
+            rest = args
+        data, lrs, mask = rest
+        hp = lrs.shape[0]
+        xs = ((data, lrs, mask) if synth is None
+              else (data + jnp.arange(hp), lrs, mask))
+        d = min(depth, hp) if apply_pending else 0
+        take = lambda a, b: jax.tree.map(lambda x: x[a:b], xs)
+        losses, gns = [], []
+        if apply_pending:
+            if d > 0:
+                entry = state["params"]
+                state, (l1, g1) = segment(state, take(0, d))
+                losses.append(l1)
+                gns.append(g1)
+                state = apply_(state, pending, entry)
+            else:
+                state = apply_(state, pending)
+        state, (l2, g2) = segment(state, take(d, hp))
+        losses.append(l2)
+        gns.append(g2)
+        cat = lambda ps: ps[0] if len(ps) == 1 else jnp.concatenate(ps)
+        denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+        m = _metrics(state, cat(losses), cat(gns), denom)
+        return state, begin(state), m
+
+    return round_fn
+
+
 # --------------------------------------------------------------------------
 # The engine
 # --------------------------------------------------------------------------
@@ -235,7 +331,16 @@ class RoundEngine:
     layout: "tree" (state mirrors the model pytree — default) |
             "flat" (state is a few dtype-bucketed [W, N] buffers, see
             core/flat.py: one sync all-reduce and one optimizer kernel per
-            bucket instead of per leaf; bitwise-equal trajectories)
+            bucket instead of per leaf; bitwise-equal trajectories) |
+            "flat_sharded" (flat buckets padded into `shards` contiguous
+            per-device chunks — the FSDP-style layout whose sync lowers to
+            reduce_scatter + all_gather under a mesh; bitwise-equal too)
+    sync:   "blocking" (round ends fully synced — default) |
+            "overlap" (reduce at the boundary, gather/apply deferred past
+            the next round's first `overlap_depth` steps; bucketed mode
+            only; depth 0 is bitwise the blocking trajectory — see the
+            module docstring.  `flush()` applies the last in-flight sync.)
+    shards: chunk count for layout="flat_sharded" (0 -> workers).
     batch_fn: host-data override — `fn(step) -> batch [W, B_loc, ...]`
             replacing the built-in TokenStream (e.g. a VisionStream source
             for the paper's ViT runs).  Implies data="host".
@@ -247,11 +352,17 @@ class RoundEngine:
 
     def __init__(self, cfg, run_cfg, *, workers: int, b_loc: int, seq: int,
                  seed: int = 0, mode: str = "bucketed", data: str = "device",
-                 layout: str = "tree", donate: bool | None = None,
+                 layout: str = "tree", sync: str = "blocking",
+                 overlap_depth: int = 0, shards: int = 0,
+                 donate: bool | None = None,
                  batch_fn: Callable | None = None):
         assert mode in ("bucketed", "legacy"), mode
         assert data in ("device", "host"), data
-        assert layout in ("tree", "flat"), layout
+        assert layout in ("tree", "flat", "flat_sharded"), layout
+        assert sync in ("blocking", "overlap"), sync
+        assert overlap_depth >= 0, overlap_depth
+        assert sync == "blocking" or mode == "bucketed", \
+            "overlapped sync runs through the bucketed program"
         assert batch_fn is None or data == "host", \
             "batch_fn is a host-data source; pass data='host'"
         assert cfg.family != "vision" or (data == "host" and batch_fn), \
@@ -259,6 +370,10 @@ class RoundEngine:
         self.cfg, self.run_cfg = cfg, run_cfg
         self.workers, self.b_loc, self.seq, self.seed = workers, b_loc, seq, seed
         self.mode, self.data, self.layout = mode, data, layout
+        self.sync_mode, self.overlap_depth = sync, overlap_depth
+        self.shards = shards
+        self._pending = None          # overlap mode: in-flight reduce
+        self._flush_fn = None
         # donation is a no-op warning on CPU; auto-enable elsewhere
         self.donate = (jax.default_backend() != "cpu") if donate is None else donate
         self.stream = TokenStream(vocab=max(cfg.vocab, 2), seed=seed)
@@ -284,7 +399,10 @@ class RoundEngine:
                 mod = api.get_module(self.cfg)
                 params_single = pm.abstract_params(mod.param_defs(self.cfg),
                                                    jnp.float32)
-            self.spec = flat.FlatParamSpace(params_single)
+            self.spec = (flat.ShardedFlatSpace(params_single,
+                                               self.shards or self.workers)
+                         if self.layout == "flat_sharded"
+                         else flat.FlatParamSpace(params_single))
         return self.spec
 
     def init_state(self, params_single: Pytree | None = None) -> Pytree:
@@ -295,32 +413,46 @@ class RoundEngine:
                                            jnp.float32)
         state = LU.init_state(self.cfg, self.run_cfg, params_single,
                               self.workers)
-        if self.layout == "flat":
+        if self.layout != "tree":
             state = flat.to_flat_state(self._ensure_spec(params_single), state)
         return state
 
     def params_single(self, state: Pytree) -> Pytree:
         """Worker-0 params as the model pytree, whatever the layout — the
         post-run handoff to eval/serving code."""
+        assert self._pending is None, \
+            "in-flight sync: pass flush(state) or synced_view(state), not " \
+            "the raw run state"
         params = state["params"]
-        if self.layout == "flat":
+        if self.layout != "tree":
             params = self._ensure_spec().unflatten(params, lead=1)
         return jax.tree.map(lambda x: x[0], params)
 
     # -- compilation ------------------------------------------------------
 
-    def _program(self, hp: int):
-        """Jitted round program for padded length hp (the cache key)."""
-        if hp in self._programs:
+    def _program(self, hp: int, apply_pending: bool = False):
+        """Jitted round program for padded length hp (the cache key; overlap
+        mode also keys on whether a pending sync is applied — the first
+        round of a run has none)."""
+        key = (hp, apply_pending) if self.sync_mode == "overlap" else hp
+        if key in self._programs:
             self.cache_hits += 1
-            return self._programs[hp]
-        make = make_bucketed_round if self.mode == "bucketed" else make_exact_round
-        spec = self._ensure_spec() if self.layout == "flat" else None
-        fn = make(self.cfg, self.run_cfg, self._synth, spec)
-        jit_kw = {"donate_argnums": (0,)} if self.donate else {}
-        self._programs[hp] = jax.jit(fn, **jit_kw)
+            return self._programs[key]
+        spec = self._ensure_spec() if self.layout != "tree" else None
+        if self.sync_mode == "overlap":
+            fn = make_overlap_round(self.cfg, self.run_cfg, self._synth,
+                                    spec, depth=self.overlap_depth,
+                                    apply_pending=apply_pending)
+            donate = (0, 1) if apply_pending else (0,)
+        else:
+            make = (make_bucketed_round if self.mode == "bucketed"
+                    else make_exact_round)
+            fn = make(self.cfg, self.run_cfg, self._synth, spec)
+            donate = (0,)
+        jit_kw = {"donate_argnums": donate} if self.donate else {}
+        self._programs[key] = jax.jit(fn, **jit_kw)
         self.compiles += 1
-        return self._programs[hp]
+        return self._programs[key]
 
     def compile_stats(self) -> dict:
         return {"compiles": self.compiles, "cache_hits": self.cache_hits,
@@ -336,7 +468,7 @@ class RoundEngine:
         """
         hp = bucket_pow2(h) if self.mode == "bucketed" else h
         lrs = jnp.asarray([lr_fn(t + i) for i in range(hp)], jnp.float32)
-        fn = self._program(hp)
+        fn = self._program(hp, self._pending is not None)
         args = []
         if self._synth is None:
             # only the h valid steps' batches are real; masked steps never
@@ -352,40 +484,88 @@ class RoundEngine:
         args.append(lrs)
         if self.mode == "bucketed":
             args.append(jnp.arange(hp) < h)
-        state, metrics = fn(state, *args)
+        if self.sync_mode == "overlap":
+            if self._pending is not None:
+                args.insert(0, self._pending)
+            state, self._pending, metrics = fn(state, *args)
+        else:
+            state, metrics = fn(state, *args)
         self.h_trace.append((t, h))
         return state, metrics
+
+    def synced_view(self, state: Pytree) -> Pytree:
+        """State with the in-flight sync applied, WITHOUT consuming it —
+        the consensus an observer (eval, logging) should see mid-run under
+        overlap mode.  Pure: the training trajectory is untouched."""
+        if self._pending is None:
+            return state
+        if self._flush_fn is None:
+            spec = self._ensure_spec() if self.layout != "tree" else None
+            self._flush_fn = jax.jit(make_sync_apply(self.run_cfg, spec))
+        return self._flush_fn(state, self._pending)
+
+    def flush(self, state: Pytree) -> Pytree:
+        """Apply the in-flight sync, if any (overlap mode): the pending
+        reduce from the last round is gathered and applied exactly, leaving
+        the state at the synced consensus a blocking round would have.  Call
+        before checkpointing or reading out final params."""
+        state = self.synced_view(state)
+        self._pending = None
+        return state
 
     # -- checkpointing ----------------------------------------------------
 
     def save(self, path: str, state: Pytree, *, step: int) -> None:
         """Checkpoint state + the engine's step / H-trace so a resumed run
-        lands exactly on the next round boundary."""
+        lands exactly on the next round boundary.  Flat layouts checkpoint
+        the buffers directly — one entry per dtype bucket, not per tensor —
+        with the layout recorded in the meta side file for cross-layout
+        restore (checkpoint/io.py)."""
+        assert self._pending is None, \
+            "flush() the in-flight sync before checkpointing"
+        spec = self._ensure_spec() if self.layout != "tree" else None
         ckpt_io.save(path, state, step=step,
                      extra={"h_trace": [[t, h] for t, h in self.h_trace],
-                            "layout": self.layout})
+                            **ckpt_io.layout_meta(self.layout, spec)})
 
     def restore(self, path: str, like_state: Pytree) -> tuple[Pytree, int]:
         """Restore into this engine's layout.  A checkpoint written under
-        the other param layout is converted on the way in (flatten/unflatten
-        are exact, so resuming across layouts stays bitwise-faithful)."""
+        any other param layout (tree <-> flat <-> flat_sharded, or a
+        different shard count) is converted on the way in through the tree
+        layout as the common currency — flatten/unflatten are exact, so
+        resuming across layouts stays bitwise-faithful."""
         _, meta = ckpt_io.read_meta(path)
         ck_layout = meta.get("layout", "tree")
-        like, spec = like_state, None
-        if ck_layout != self.layout:
+        ck_shards = meta.get("shards")
+        my_shards = (self._ensure_spec().shards
+                     if self.layout == "flat_sharded" else None)
+        convert = ck_layout != self.layout or ck_shards != my_shards
+        ck_spec = None
+        if convert:
             # tree-layout engines derive the spec from the live state (its
             # dtypes are authoritative); flat engines already carry one
-            spec = (flat.FlatParamSpace(
-                        jax.tree.map(lambda x: x[0], like_state["params"]))
-                    if self.layout == "tree" else self._ensure_spec())
-            like = (flat.to_tree_state(spec, like_state)
-                    if ck_layout == "tree"
-                    else flat.to_flat_state(spec, like_state))
+            tree_state = (like_state if self.layout == "tree"
+                          else flat.to_tree_state(self._ensure_spec(),
+                                                  like_state))
+            if ck_layout == "tree":
+                like = tree_state
+            else:
+                params_single = jax.tree.map(lambda x: x[0],
+                                             tree_state["params"])
+                ck_spec = (flat.ShardedFlatSpace(params_single,
+                                                 ck_shards or 1)
+                           if ck_layout == "flat_sharded"
+                           else flat.FlatParamSpace(params_single))
+                like = flat.to_flat_state(ck_spec, tree_state)
+        else:
+            like = like_state
         state, step, extra = ckpt_io.restore_with_meta(path, like)
-        if spec is not None:
-            state = (flat.to_flat_state(spec, state)
-                     if self.layout == "flat"
-                     else flat.to_tree_state(spec, state))
+        if convert:
+            if ck_spec is not None:
+                state = flat.to_tree_state(ck_spec, state)
+            if self.layout != "tree":
+                state = flat.to_flat_state(self._ensure_spec(), state)
+        self._pending = None
         trace = [(int(t), int(h)) for t, h in extra.get("h_trace", [])]
         step = int(step or 0)
         if trace:

@@ -28,9 +28,20 @@ assignment — their leaves land at the same offsets, in their own dtype — so
 tensor.
 
 The tree layout remains available (`--param-layout tree`): it is the right
-tool when you need per-tensor stats (debugging which layer diverges), and it
-is currently the only layout for the fsdp policy (flat buffers keep the
-per-leaf inner sharding structure out of reach by construction).
+tool when you need per-tensor stats (debugging which layer diverges).
+
+ShardedFlatSpace (`--param-layout flat_sharded`) extends the flat layout the
+FSDP way: each dtype bucket is padded so it splits into per-device
+*contiguous chunks* — the flat dim is sharded over the mesh axes that do NOT
+carry the worker axis, so optimizer state and anchors are stored at 1/S per
+device, and the every-H-steps worker mean decomposes into one
+`reduce_scatter` (each worker reduces the 1/W chunk it owns) plus one
+`all_gather` (rebuild the consensus) per bucket instead of a full
+all-reduce.  The gather leg is what the RoundEngine's `--sync overlap` mode
+defers into the next round (core/engine.py).  Because the chunk rule is
+"pad, then split contiguously", the fsdp policy — whose per-leaf inner
+shardings the plain flat layout cannot represent — gets a flat path too:
+chunks replace per-tensor shardings.
 """
 from __future__ import annotations
 
@@ -91,6 +102,11 @@ class FlatParamSpace:
     def bucket_leaves(self, bucket: str) -> int:
         return len(self._order[bucket])
 
+    def buffer_size(self, bucket: str) -> int:
+        """Bucket-buffer length as materialized by `flatten` (the sharded
+        subclass pads this up to a multiple of its chunk count)."""
+        return self.sizes[bucket]
+
     def segment_ids(self, bucket: str) -> np.ndarray:
         """int32 [N_bucket]: which leaf (bucket-local index) each element of
         the bucket buffer belongs to — the per-tensor reduction map."""
@@ -146,6 +162,65 @@ class FlatParamSpace:
     def spread(self, bucket: str, per_leaf: jax.Array) -> jax.Array:
         """Gather `[#leaves]` per-tensor values back to elements `[N]`."""
         return per_leaf[jnp.asarray(self.segment_ids(bucket))]
+
+
+class ShardedFlatSpace(FlatParamSpace):
+    """FlatParamSpace whose buckets split into per-device contiguous chunks.
+
+    Each dtype bucket is zero-padded to a multiple of `shards` so that it
+    divides evenly into `shards` contiguous chunks (FSDP-style).  `shards`
+    should be W * S — worker count times the product of the flat-dim mesh
+    axes — so both the storage sharding (S chunks) and the sync
+    reduce_scatter (each worker owns 1/W of a chunk) land on whole-element
+    boundaries.  Padding is invisible to `unflatten` (leaf offsets never
+    reach it) and inert in the runtime: pad params/grads/moments start and
+    stay exactly zero, pad deltas quantize to zero, and the pad's segment id
+    sits outside [0, #leaves) so `segment_max` drops it.
+
+    When built with a `mesh` (plus the worker/shard axis names), the sync
+    path (core/sync.py) expresses the worker mean as an explicit
+    `psum_scatter` + `all_gather` over `worker_axes` via shard_map — one
+    reduce_scatter and one all_gather per bucket on the wire.  Without a
+    mesh (single-process tests, the host training loop) the same state
+    layout runs the plain-jnp flat path, bitwise-equal to layouts tree/flat.
+    """
+
+    def __init__(self, tree: Pytree, shards: int = 1, *, mesh=None,
+                 worker_axes: tuple[str, ...] = (),
+                 shard_axes: tuple[str, ...] = ()):
+        super().__init__(tree)
+        assert shards >= 1, shards
+        self.shards = shards
+        self.mesh = mesh
+        self.worker_axes = tuple(worker_axes)
+        self.shard_axes = tuple(shard_axes)
+        self.pad: dict[str, int] = {b: (-n) % shards
+                                    for b, n in self.sizes.items()}
+
+    def buffer_size(self, bucket: str) -> int:
+        """Padded bucket-buffer length (a multiple of `shards`)."""
+        return self.sizes[bucket] + self.pad[bucket]
+
+    def flatten(self, tree: Pytree, *, lead: int = 0) -> dict[str, jax.Array]:
+        out = super().flatten(tree, lead=lead)
+        for b, x in out.items():
+            if self.pad[b]:
+                widths = [(0, 0)] * lead + [(0, self.pad[b])]
+                out[b] = jnp.pad(x, widths)
+        return out
+
+    def segment_ids(self, bucket: str) -> np.ndarray:
+        """Like the base map, extended over the pad with id == #leaves —
+        out of range for `segment_max` (pad never contaminates a leaf's
+        statistic) and clamped by `spread`'s gather (pad elements read the
+        last leaf's value, harmless: their delta is exactly zero)."""
+        if bucket not in self._seg:
+            base = super().segment_ids(bucket)
+            if self.pad[bucket]:
+                ext = np.full(self.pad[bucket], self.bucket_leaves(bucket),
+                              np.int32)
+                self._seg[bucket] = np.concatenate([base, ext])
+        return self._seg[bucket]
 
 
 # --------------------------------------------------------------------------

@@ -18,11 +18,23 @@ Layouts (`make_sync(run_cfg, spec=...)`):
     quantize + momentum + anchor math runs as one fused pass
     (kernels/sync_update.py).  Per-tensor quantization scales are preserved
     via the spec's segment reductions, keeping the two layouts bitwise-equal.
+  * flat_sharded (spec=ShardedFlatSpace carrying a mesh) — the worker mean
+    decomposes into its two halves, written as explicit collectives: one
+    `psum_scatter` (reduce_scatter — each worker reduces the contiguous
+    1/W chunk it owns) and one `all_gather` (rebuild the consensus) per
+    dtype bucket.  Without a mesh the same state layout runs the flat path
+    above on the padded buffers, bitwise-equal to tree/flat.
+
+The two halves are also exposed separately (`make_sync_begin` /
+`make_sync_apply`) so the RoundEngine's `--sync overlap` mode can issue the
+reduce at the round boundary and defer the gather/apply past the first local
+steps of the next round (core/engine.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops as kops
 
@@ -65,11 +77,178 @@ def flat_delta_scales(spec, bucket: str, p, anchor):
     return spec.spread(bucket, _guarded_scale(spec.segment_max(bucket, d)))
 
 
+def _q_roundtrip(d, scale):
+    """int8 quantize/dequantize one bucket delta [W, N] with elementwise
+    scales [N] — the same math the fused kernel and the tree path run."""
+    q = jnp.clip(jnp.round(d / scale[None] * 127.0), -127, 127)
+    return q.astype(jnp.int8).astype(jnp.float32) * (scale[None] / 127.0)
+
+
+# --------------------------------------------------------------------------
+# The decomposed sync: reduce (scatter leg) | gather + outer update + apply
+# --------------------------------------------------------------------------
+
+def _axt(axes: tuple[str, ...]):
+    """Mesh-axis tuple -> PartitionSpec entry."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _use_collectives(spec) -> bool:
+    """True when `spec` is a mesh-carrying ShardedFlatSpace with a real
+    worker axis — the explicit reduce_scatter/all_gather decomposition."""
+    return (getattr(spec, "mesh", None) is not None
+            and bool(getattr(spec, "worker_axes", ())))
+
+
+def _rs_mean(spec, x, w: int):
+    """[W, N] bucket -> worker-mean chunks [W, N/W] via ONE reduce_scatter
+    over the worker axes: device (worker i, shard s) ends up owning the i-th
+    contiguous 1/W sub-chunk of shard s's mean."""
+    from repro.models.common import shard_map_compat
+
+    wt, st = _axt(spec.worker_axes), _axt(spec.shard_axes)
+
+    def body(d):
+        s = jax.lax.psum_scatter(d, spec.worker_axes, scatter_dimension=1,
+                                 tiled=True)
+        return s / w
+
+    return shard_map_compat(body, spec.mesh, in_specs=P(wt, st),
+                            out_specs=P(wt, st))(x)
+
+
+def _ag_mean(spec, pending):
+    """Inverse leg: gather the worker-owned chunks [W, N/W] back into the
+    full consensus [N] (replicated over workers) via ONE all_gather."""
+    from repro.models.common import shard_map_compat
+
+    wt, st = _axt(spec.worker_axes), _axt(spec.shard_axes)
+
+    def body(s):
+        return jax.lax.all_gather(s, spec.worker_axes, axis=1, tiled=True)
+
+    out = shard_map_compat(body, spec.mesh, in_specs=P(wt, st),
+                           out_specs=P(None, st))(pending)
+    return out[0]
+
+
+def make_sync_begin(run_cfg, spec=None):
+    """First half of the sync: the reduce.  begin(state) -> pending, a pure
+    function of the pre-sync state (no state mutation).
+
+    pending per bucket/leaf, in f32: the worker-mean params (plain sync) or
+    the worker-mean (de)quantized delta from the anchor (quantize/momentum
+    sync).  Under a mesh-carrying ShardedFlatSpace the mean is an explicit
+    psum_scatter over the worker axes — one reduce_scatter per dtype bucket
+    on the wire — and pending stays worker-sharded [W, N/W]; the matching
+    all_gather lives in make_sync_apply (the deferrable leg)."""
+    quantize = run_cfg.sync_quantize
+    mom = run_cfg.outer_momentum
+    coll = _use_collectives(spec)
+
+    def mean_w(x):
+        return _rs_mean(spec, x, x.shape[0]) if coll else jnp.mean(x, axis=0)
+
+    def begin(state):
+        params = state["params"]
+        if not quantize and mom == 0.0:
+            return jax.tree.map(
+                lambda p: mean_w(p.astype(jnp.float32)), params)
+        anchor = state["anchor"]
+        delta = jax.tree.map(
+            lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
+            params, anchor)
+        if quantize:
+            if spec is None:
+                delta = _quantize_delta(delta)
+            else:
+                # per-tensor scales via the spec's segment reductions; under
+                # a mesh GSPMD lowers the max/segment ops with its own small
+                # collectives — only the delta mean itself is the RS leg
+                delta = {b: _q_roundtrip(
+                             d, flat_delta_scales(spec, b, params[b],
+                                                  anchor[b]))
+                         for b, d in delta.items()}
+        return jax.tree.map(mean_w, delta)
+
+    return begin
+
+
+def make_sync_apply(run_cfg, spec=None):
+    """Second half of the sync: gather + outer update + apply.
+
+    apply(state, pending, entry_params=None) -> state.
+      * entry_params=None — exact mode: params become the consensus
+        directly; composed right after begin() this is the blocking sync,
+        and deferred one program later with no steps in between (overlap
+        depth 0) it stays bitwise the blocking trajectory.
+      * entry_params given (the params begin() saw) — correction mode for
+        overlap depth > 0: each worker keeps the local progress it made
+        while the reduce was in flight, x_i <- x_i + (consensus - entry_i).
+    Under a mesh-carrying ShardedFlatSpace the gather is an explicit
+    all_gather over the worker axes — the deferred leg of the decomposed
+    all-reduce."""
+    quantize = run_cfg.sync_quantize
+    mom = run_cfg.outer_momentum
+    coll = _use_collectives(spec)
+
+    def gather(x):
+        return _ag_mean(spec, x) if coll else x
+
+    def to_params(consensus, params, entry):
+        if entry is None:
+            return jax.tree.map(
+                lambda c, p: jnp.broadcast_to(c[None], p.shape
+                                              ).astype(p.dtype),
+                consensus, params)
+        return jax.tree.map(
+            lambda c, p, e: (p.astype(jnp.float32)
+                             + (c[None] - e.astype(jnp.float32))
+                             ).astype(p.dtype),
+            consensus, params, entry)
+
+    def apply(state, pending, entry_params=None):
+        params = state["params"]
+        mean = jax.tree.map(gather, pending)
+        if not quantize and mom == 0.0:
+            return {**state, "params": to_params(mean, params, entry_params)}
+        new_state = dict(state)
+        if mom > 0.0:
+            mu = jax.tree.map(lambda m, d: mom * m + d,
+                              state["outer_mu"], mean)
+            step = jax.tree.map(lambda m, d: mom * m + d, mu, mean)
+            new_state["outer_mu"] = mu
+        else:
+            step = mean
+        new_anchor = jax.tree.map(
+            lambda a, s: (a.astype(jnp.float32) + s).astype(a.dtype),
+            state["anchor"], step)
+        new_state["anchor"] = new_anchor
+        new_state["params"] = to_params(new_anchor, params, entry_params)
+        return new_state
+
+    return apply
+
+
 def make_sync(run_cfg, spec=None):
     """Returns sync(state) -> state.  state = {"params", "opt", "anchor"?,
     "outer_mu"?}; params carry a leading worker axis.  With `spec` (a
     core.flat.FlatParamSpace) the state is flat: params {bucket: [W, N]},
-    anchor/outer_mu {bucket: [N]}."""
+    anchor/outer_mu {bucket: [N]}.  A mesh-carrying ShardedFlatSpace
+    composes the two explicit halves back-to-back: the blocking sync is then
+    one reduce_scatter + one all_gather per bucket instead of a full
+    all-reduce."""
+    if _use_collectives(spec):
+        begin = make_sync_begin(run_cfg, spec)
+        apply_ = make_sync_apply(run_cfg, spec)
+
+        def sync_sharded(state):
+            return apply_(state, begin(state))
+
+        return sync_sharded
+
     quantize = run_cfg.sync_quantize
     mom = run_cfg.outer_momentum
     outer_lr = 1.0

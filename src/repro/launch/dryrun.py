@@ -83,11 +83,15 @@ def main() -> None:
                     help="train_round flavor to lower: the seed's exact-H "
                          "program or the RoundEngine's padded+masked bucket")
     ap.add_argument("--param-layout", default="tree",
-                    choices=["tree", "flat"],
+                    choices=["tree", "flat", "flat_sharded"],
                     help="flat: lower the round over FlatParamSpace dtype "
                          "buckets (requires --engine bucketed; the sync "
                          "drops to one all-reduce per bucket — see "
-                         "collective_counts in the record)")
+                         "collective_counts in the record); flat_sharded: "
+                         "ShardedFlatSpace chunks — state stored 1/S per "
+                         "device, the sync one reduce_scatter + one "
+                         "all_gather per bucket (collective_result_bytes "
+                         "shows the scatter leg landing 1/W per device)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()

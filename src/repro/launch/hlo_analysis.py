@@ -61,8 +61,12 @@ def _crosses_pod(line: str, pod_size: int) -> bool | None:
 
 
 def _iter_collectives(hlo_text: str):
-    """Yield (kind, line, nbytes) for every collective op in the optimized
-    HLO, with start/done pairs reported once (on the -start line)."""
+    """Yield (kind, line, nbytes_full, nbytes_result) for every collective
+    op in the optimized HLO, with start/done pairs reported once (on the
+    -start line).  nbytes_result sums the *result* type(s) only — for
+    reduce-scatter that is the per-device owned chunk (the scatter leg);
+    nbytes_full takes the larger of (result, operands) — the full-tensor
+    roofline size for gather/scatter ops."""
     for line in hlo_text.splitlines():
         s = line.strip()
         m = re.match(r"%?[\w\.\-]+\s*=\s*(.*)$", s)
@@ -82,15 +86,18 @@ def _iter_collectives(hlo_text: str):
         if not shapes:
             continue
         # result type(s) appear before the op name; operands may not carry
-        # inline types in optimized HLO.  Take result tuple size.
-        head = rest.split(kind)[0]
-        rshapes = _SHAPE_RE.findall(head)
-        use = rshapes if rshapes else shapes
-        yield kind, line, sum(_shape_bytes(dt, dims) for dt, dims in use)
+        # inline types in optimized HLO.
+        head, _, tail = rest.partition(kind)
+        rshapes = _SHAPE_RE.findall(head) or shapes
+        oshapes = _SHAPE_RE.findall(tail)
+        nb = lambda sh: sum(_shape_bytes(dt, dims) for dt, dims in sh)
+        res = nb(rshapes)
+        yield kind, line, max(res, nb(oshapes)), res
 
 
 def collective_bytes(hlo_text: str, pod_size: int = 0) -> dict[str, int]:
-    """Sum *result* sizes of collective ops in the optimized HLO, per kind.
+    """Sum full-tensor sizes of collective ops in the optimized HLO, per
+    kind.
 
     For all-reduce / all-to-all / collective-permute, result size == operand
     size.  For all-gather the result is the gathered (full) tensor and for
@@ -101,10 +108,23 @@ def collective_bytes(hlo_text: str, pod_size: int = 0) -> dict[str, int]:
     """
     out = {k: 0 for k in _COLLECTIVES}
     out["dci"] = 0  # pod-crossing bytes (multi-pod meshes only)
-    for kind, line, nbytes in _iter_collectives(hlo_text):
+    for kind, line, nbytes, _ in _iter_collectives(hlo_text):
         out[kind] += nbytes
         if pod_size and _crosses_pod(line, pod_size):
             out["dci"] += nbytes
+    return out
+
+
+def collective_result_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum *result* sizes per kind — the per-device landing size of each
+    leg.  This is where the sharded sync's scatter-leg win shows: a
+    reduce-scatter's result is the owned 1/W chunk, ~W x smaller than the
+    all-reduce result the flat layout pays per bucket; the matching
+    all_gather (result: the full bucket) is the leg `--sync overlap` hides
+    behind the next round's first local steps."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for kind, _, _, res in _iter_collectives(hlo_text):
+        out[kind] += res
     return out
 
 
@@ -114,11 +134,13 @@ def collective_counts(hlo_text: str) -> dict[str, int]:
     This is the latency/launch-overhead axis the byte totals miss: a sync
     that moves the same bytes in one all-reduce per dtype bucket
     (--param-layout flat) instead of one per pytree leaf issues O(#dtypes)
-    collectives instead of O(#leaves) — the acceptance measure for the flat
-    layout (see core/flat.py and tests/test_flat.py).
+    collectives instead of O(#leaves) — and the flat_sharded layout's sync
+    must show exactly one reduce-scatter + one all-gather per bucket (the
+    acceptance measures; see core/flat.py, tests/test_flat.py and
+    tests/test_sharded.py).
     """
     out = {k: 0 for k in _COLLECTIVES}
-    for kind, _, _ in _iter_collectives(hlo_text):
+    for kind, _, _, _ in _iter_collectives(hlo_text):
         out[kind] += 1
     return out
 
@@ -141,6 +163,7 @@ def summarize(compiled, *, n_devices: int) -> dict:
             "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
         },
         "collective_bytes": coll,
+        "collective_result_bytes": collective_result_bytes(hlo),
         "collective_counts": collective_counts(hlo),
         "collective_bytes_total": sum(v for k, v in coll.items()
                                       if k != "dci"),

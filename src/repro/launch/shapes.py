@@ -80,16 +80,29 @@ def _abstract_state(cfg, run_cfg, w: int, dtype):
     return out
 
 
-def _flat_spec(cfg, dtype):
-    from repro.core.flat import FlatParamSpace
+def _flat_spec(cfg, dtype, *, mesh=None, policy=None, layout="flat"):
+    """The conversion spec for a flat layout.  layout="flat_sharded" builds
+    a mesh-carrying ShardedFlatSpace: buckets pad to W x S contiguous
+    chunks (W workers x S flat-dim shards over the non-worker mesh axes) so
+    both the storage sharding and the sync reduce_scatter land on whole
+    elements, and the sync path emits its explicit collectives."""
+    from repro.core.flat import FlatParamSpace, ShardedFlatSpace
     mod = api.get_module(cfg)
-    return FlatParamSpace(pm.abstract_params(mod.param_defs(cfg), dtype))
+    pabs = pm.abstract_params(mod.param_defs(cfg), dtype)
+    if layout != "flat_sharded":
+        return FlatParamSpace(pabs)
+    waxes = pm.worker_mesh_axes(policy, mesh)
+    saxes = tuple(a for a in mesh.axis_names if a not in waxes)
+    sizes = pm.mesh_axis_sizes(mesh)
+    shards = math.prod(sizes[a] for a in waxes + saxes)
+    return ShardedFlatSpace(pabs, shards, mesh=mesh, worker_axes=waxes,
+                            shard_axes=saxes)
 
 
 def _abstract_flat_state(cfg, run_cfg, w: int, dtype, spec):
     """Flat-layout runtime state: one [W, N] buffer per dtype bucket."""
     bufs = lambda lead, dt=None: {
-        b: SDS(lead + (spec.sizes[b],), dt or jnp.dtype(b))
+        b: SDS(lead + (spec.buffer_size(b),), dt or jnp.dtype(b))
         for b in spec.buckets}
     if run_cfg.optimizer == "sgd":
         opt = {"mu": bufs((w,), jnp.float32), "step": SDS((), jnp.int32)}
@@ -105,10 +118,18 @@ def _abstract_flat_state(cfg, run_cfg, w: int, dtype, spec):
 
 
 def _flat_state_specs(run_cfg, waxes, spec):
-    """Shardings for the flat state: the worker axis over the worker mesh
-    axes; the flat dim replicated (flat targets the dp policy — the per-leaf
-    inner shardings of fsdp don't survive concatenation by construction)."""
-    bufs = lambda lead: {b: P(*(lead + (None,))) for b in spec.buckets}
+    """Shardings for the flat state.
+
+    Plain flat: the worker axis over the worker mesh axes; the flat dim
+    replicated (per-leaf inner shardings don't survive concatenation).
+    flat_sharded: the flat dim additionally splits into contiguous chunks
+    over the non-worker mesh axes — params AND optimizer moments stored at
+    1/S per device, anchors/outer momentum likewise — which is what lets
+    the fsdp policy run a flat layout at all."""
+    saxes = getattr(spec, "shard_axes", ())
+    flat_dim = (saxes[0] if len(saxes) == 1 else tuple(saxes)) if saxes \
+        else None
+    bufs = lambda lead: {b: P(*(lead + (flat_dim,))) for b in spec.buckets}
     wlead, alead = (waxes,), ()
     if run_cfg.optimizer == "sgd":
         opt = {"mu": bufs(wlead), "step": P()}
@@ -198,10 +219,12 @@ def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
     to the power-of-two bucket Hp plus a replicated [Hp] validity mask; the
     lowered unit is then exactly what production runs per round.
     layout="flat" (bucketed only): the state is FlatParamSpace dtype buckets
-    — lowering this proves the per-sync all-reduce count is O(#buckets)."""
-    assert layout in ("tree", "flat"), layout
+    — lowering this proves the per-sync all-reduce count is O(#buckets).
+    layout="flat_sharded": ShardedFlatSpace chunks — state stored 1/S per
+    device and the sync an explicit reduce_scatter + all_gather pair."""
+    assert layout in ("tree", "flat", "flat_sharded"), layout
     assert layout == "tree" or engine == "bucketed", \
-        "the flat layout runs through the RoundEngine's bucketed program"
+        "the flat layouts run through the RoundEngine's bucketed program"
     w = pm.worker_count(policy, mesh)
     waxes = pm.worker_mesh_axes(policy, mesh)
     waxes = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
@@ -209,8 +232,9 @@ def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
     b_loc = shape.global_batch // max(w, 1)
     inner_data = "data" if policy == "fsdp" and _div(b_loc, sizes.get("data", 1)) else None
 
-    spec = _flat_spec(cfg, dtype) if layout == "flat" else None
-    if layout == "flat":
+    spec = (_flat_spec(cfg, dtype, mesh=mesh, policy=policy, layout=layout)
+            if layout != "tree" else None)
+    if layout != "tree":
         sspec = _flat_state_specs(run_cfg, waxes, spec)
         state = _abstract_flat_state(cfg, run_cfg, w, dtype, spec)
     else:
@@ -457,8 +481,9 @@ def build_calib_case(cfg, shape_name: str, mesh, *, policy: str,
         b_loc = shape.global_batch // max(w, 1)
         inner_data = ("data" if policy == "fsdp"
                       and _div(b_loc, sizes.get("data", 1)) else None)
-        spec = _flat_spec(cfg, dtype) if layout == "flat" else None
-        if layout == "flat":
+        spec = (_flat_spec(cfg, dtype, mesh=mesh, policy=policy,
+                           layout=layout) if layout != "tree" else None)
+        if layout != "tree":
             state = _abstract_flat_state(cfg, run_cfg, w, dtype, spec)
             sspec = _flat_state_specs(run_cfg, waxes, spec)
         else:

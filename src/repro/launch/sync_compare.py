@@ -4,23 +4,32 @@ os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
                            os.environ.get("REPRO_DRYRUN_DEVICES", "8")).strip()
 # ^ MUST run before any other import: jax locks the device count on first init.
 
-"""Tree-vs-flat sync lowering compared on a debug sharded mesh.
+"""Sync lowering compared across param layouts on a debug sharded mesh.
 
-Compiles the every-H-steps sync under both param layouts and reports, per
-layout, what the wire actually sees: collective op counts per kind
-(hlo_analysis.collective_counts — the latency/launch axis) and bytes on
-wire per sync (collective_bytes — the bandwidth axis).  This is the
-measurement behind the flat layout's acceptance claim: one all-reduce per
-dtype bucket instead of one per pytree leaf, same bytes.
+Compiles the every-H-steps sync under the tree / flat / flat_sharded param
+layouts and reports, per layout, what the wire actually sees: collective op
+counts per kind (hlo_analysis.collective_counts — the latency/launch axis),
+full-tensor bytes per sync (collective_bytes — the bandwidth axis), and
+per-leg landing bytes (collective_result_bytes — where the sharded layout's
+scatter-leg ~W x drop shows).  This is the measurement behind the layout
+acceptance claims: flat = one all-reduce per dtype bucket instead of one
+per pytree leaf; flat_sharded = one reduce_scatter + one all_gather per
+bucket instead of the full all-reduce, with the scatter leg landing 1/W of
+the bucket per device.
 
 Run as a module (subprocess-safe: the device-count pin above must precede
 any jax init, so callers shell out rather than import):
 
   PYTHONPATH=src python -m repro.launch.sync_compare \
-      --arch starcoder2-3b [--smoke] [--quantize] [--momentum 0.9]
+      --arch starcoder2-3b [--param-layout flat_sharded] [--policy fsdp] \
+      [--mesh 4x2 | --mesh 2x2x2] [--smoke] [--quantize] [--momentum 0.9]
 
-Prints one JSON object; benchmarks/table1_comm.py and tests/test_flat.py
-consume it.
+A three-field mesh (PxDxM) adds a pod axis — the fsdp policy's worker axis,
+so `--mesh 2x2x2 --policy fsdp` exercises the multi-pod QSR configuration
+where each pod is one worker and buckets chunk over (data, model).
+
+Prints one JSON object; benchmarks/table1_comm.py, tests/test_flat.py and
+tests/test_sharded.py consume it.
 """
 import argparse
 import json
@@ -32,21 +41,26 @@ from repro.launch import hlo_analysis
 from repro.launch.mesh import make_debug_mesh
 from repro.launch.shapes import build_calib_case
 
+LAYOUTS = ("tree", "flat", "flat_sharded")
+
 
 def compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
             quantize: bool = False, momentum: float = 0.0,
-            n_data: int = 4, n_model: int = 2) -> dict:
-    """{layout: {collective_counts, collective_bytes, all_reduce_ops,
-    bytes_on_wire, n_leaves, n_buckets}} for the dp-policy sync."""
+            n_data: int = 4, n_model: int = 2, pods: int = 0,
+            policy: str = "dp",
+            layouts: tuple[str, ...] = LAYOUTS) -> dict:
+    """{layout: {collective_counts, collective_bytes, collective_leg_bytes,
+    all_reduce_ops, reduce_scatter_ops, all_gather_ops, bytes_on_wire,
+    scatter_leg_bytes, n_leaves, n_buckets}} for the policy's sync."""
     from repro.configs import registry as R
 
     cfg = R.get_smoke_config(arch) if smoke else R.get_config(arch)
-    run_cfg = RunConfig(sharding="dp", sync_quantize=quantize,
+    run_cfg = RunConfig(sharding=policy, sync_quantize=quantize,
                         outer_momentum=momentum)
-    mesh = make_debug_mesh(n_data, n_model)
+    mesh = make_debug_mesh(n_data, n_model, pods=pods)
     out = {}
-    for layout in ("tree", "flat"):
-        case = build_calib_case(cfg, "train_4k", mesh, policy="dp",
+    for layout in layouts:
+        case = build_calib_case(cfg, "train_4k", mesh, policy=policy,
                                 run_cfg=run_cfg, fn_kind="sync",
                                 layout=layout)
         with mesh:
@@ -56,11 +70,16 @@ def compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
         hlo = compiled.as_text()
         counts = hlo_analysis.collective_counts(hlo)
         nbytes = hlo_analysis.collective_bytes(hlo)
+        legs = hlo_analysis.collective_result_bytes(hlo)
         out[layout] = {
             "collective_counts": counts,
             "collective_bytes": {k: v for k, v in nbytes.items() if v},
+            "collective_leg_bytes": {k: v for k, v in legs.items() if v},
             "all_reduce_ops": counts["all-reduce"],
+            "reduce_scatter_ops": counts["reduce-scatter"],
+            "all_gather_ops": counts["all-gather"],
             "bytes_on_wire": sum(v for k, v in nbytes.items() if k != "dci"),
+            "scatter_leg_bytes": legs["reduce-scatter"],
             "n_leaves": case.meta["n_leaves"],
             "n_buckets": case.meta["n_buckets"],
         }
@@ -74,16 +93,24 @@ def main() -> None:
                     help="production config (default: smoke, CPU-runnable)")
     ap.add_argument("--quantize", action="store_true")
     ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--policy", default="dp", choices=["dp", "fsdp"])
+    ap.add_argument("--param-layout", default=None, choices=list(LAYOUTS),
+                    help="compare only this layout (default: all three)")
     ap.add_argument("--mesh", default="4x2",
-                    help="debug mesh data x model; 8x1 = pure dp, where the "
-                         "two layouts move identical bytes (with model "
-                         "sharding, tree all-reduces shard-local bytes)")
+                    help="debug mesh data x model, or pod x data x model; "
+                         "8x1 = pure dp, where tree/flat move identical "
+                         "bytes and flat_sharded's scatter leg lands 1/W "
+                         "per device (with model sharding, tree all-reduces "
+                         "shard-local bytes)")
     args = ap.parse_args()
-    n_data, n_model = (int(x) for x in args.mesh.split("x"))
+    dims = [int(x) for x in args.mesh.split("x")]
+    pods, n_data, n_model = ([0] + dims if len(dims) == 2 else dims)
+    layouts = (args.param_layout,) if args.param_layout else LAYOUTS
     print(json.dumps(compare(args.arch, smoke=not args.full,
                              quantize=args.quantize,
                              momentum=args.momentum,
-                             n_data=n_data, n_model=n_model)))
+                             n_data=n_data, n_model=n_model, pods=pods,
+                             policy=args.policy, layouts=layouts)))
 
 
 if __name__ == "__main__":

@@ -31,27 +31,33 @@ from repro.optim.lr import make_lr_fn
 def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
           seed: int = 0, ckpt_dir: str | None = None, log_every: int = 1,
           engine: str = "bucketed", data: str = "device",
-          layout: str = "tree", eval_fn=None,
+          layout: str = "tree", sync: str = "blocking",
+          overlap_depth: int = 0, eval_fn=None,
           eng: RoundEngine | None = None):
     """Run a full training run; returns (state, history).
 
     history rows are (t_end, h, loss, lr) — unchanged from the pre-engine
     driver so downstream plots/tests keep working.  Pass an `eng` to keep a
     handle on the engine (compile stats, H-trace) after the run; otherwise
-    one is built from the `engine`/`data`/`layout` mode flags.
+    one is built from the `engine`/`data`/`layout`/`sync` mode flags.
+    With sync="overlap" the in-flight reduce is flushed at checkpoints and
+    before returning, so the returned state is always the synced consensus.
     """
     if eng is None:
         eng = RoundEngine(cfg, run_cfg, workers=workers, b_loc=b_loc,
                           seq=seq, seed=seed, mode=engine, data=data,
-                          layout=layout)
+                          layout=layout, sync=sync,
+                          overlap_depth=overlap_depth)
     else:
         got = (eng.cfg, eng.run_cfg, eng.workers, eng.b_loc, eng.seq,
-               eng.seed, eng.mode, eng.data, eng.layout)
+               eng.seed, eng.mode, eng.data, eng.layout, eng.sync_mode,
+               eng.overlap_depth)
         want = (cfg, run_cfg, workers, b_loc, seq, seed, engine, data,
-                layout)
+                layout, sync, overlap_depth)
         assert got == want, \
             "engine built with (cfg, run_cfg, workers, b_loc, seq, seed, " \
-            f"mode, data, layout)={got},\ntrain() called with {want}"
+            f"mode, data, layout, sync, overlap_depth)={got},\n" \
+            f"train() called with {want}"
     state = eng.init_state()
     lr_fn = make_lr_fn(run_cfg)
 
@@ -78,10 +84,18 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
                   f"compiles {cs['compiles']} (hits {cs['cache_hits']})  "
                   f"({time.time()-t_start:.1f}s)")
         if eval_fn is not None:
-            eval_fn(t, state)
+            # overlap mode: observers see the synced consensus (pure view;
+            # the in-flight pipeline is untouched), so eval curves match
+            # blocking-sync runs
+            eval_fn(t, eng.synced_view(state))
         if ckpt_dir and t % max(run_cfg.total_steps // 4, 1) == 0:
+            # overlap mode: a checkpoint is a forced sync point — the
+            # in-flight reduce is applied so the saved state is a round
+            # boundary in the blocking sense
+            state = eng.flush(state)
             eng.save(ckpt_dir, state, step=t)
             saved_at = t
+    state = eng.flush(state)
     if ckpt_dir and saved_at != t:
         eng.save(ckpt_dir, state, step=t)
     return state, history
@@ -103,11 +117,26 @@ def main():
     ap.add_argument("--data", default="device", choices=["device", "host"],
                     help="batch synthesis inside the jitted round vs numpy")
     ap.add_argument("--param-layout", default="tree",
-                    choices=["tree", "flat"],
+                    choices=["tree", "flat", "flat_sharded"],
                     help="tree: state mirrors the model pytree (per-tensor "
                          "stats); flat: dtype-bucketed 1-D buffers — one "
                          "sync all-reduce and one optimizer kernel per "
-                         "bucket (core/flat.py), bitwise-equal training")
+                         "bucket (core/flat.py), bitwise-equal training; "
+                         "flat_sharded: buckets padded into per-device "
+                         "contiguous chunks (FSDP-style) — sync decomposes "
+                         "into reduce_scatter + all_gather, bitwise-equal "
+                         "too")
+    ap.add_argument("--sync", default="blocking",
+                    choices=["blocking", "overlap"],
+                    help="blocking: each round ends fully synced (Alg. 1/2 "
+                         "verbatim); overlap: the delta reduce is issued at "
+                         "the round boundary and the gather/apply deferred "
+                         "past the next round's first --overlap-depth local "
+                         "steps (depth 0 keeps the blocking trajectory "
+                         "bitwise)")
+    ap.add_argument("--overlap-depth", type=int, default=0,
+                    help="local steps the next round runs on stale params "
+                         "before the deferred sync applies (--sync overlap)")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--workers", type=int, default=4)
@@ -128,10 +157,13 @@ def main():
         remat=False)
     eng = RoundEngine(cfg, run_cfg, workers=args.workers, b_loc=args.batch,
                       seq=args.seq, mode=args.engine, data=args.data,
-                      layout=args.param_layout)
+                      layout=args.param_layout, sync=args.sync,
+                      overlap_depth=args.overlap_depth)
     state, hist = train(cfg, run_cfg, workers=args.workers, b_loc=args.batch,
                         seq=args.seq, ckpt_dir=args.ckpt, engine=args.engine,
-                        data=args.data, layout=args.param_layout, eng=eng)
+                        data=args.data, layout=args.param_layout,
+                        sync=args.sync, overlap_depth=args.overlap_depth,
+                        eng=eng)
     losses = [l for _, _, l, _ in hist]
     if not losses:
         print("nothing to do: checkpoint already at "

@@ -241,13 +241,12 @@ def _moe_apply_shard_map(cfg: ModelConfig, p: dict, x: jax.Array, mesh):
         out, aux = body(*a)
         return out, aux[None]  # [1] per shard -> gathered over 'data'
 
-    fn = jax.shard_map(
-        body2, mesh=mesh, axis_names={"data"},
+    fn = cm.shard_map_compat(
+        body2, mesh, manual_axes={"data"},
         in_specs=(P("data", None), P(None, None),
                   P("data", None, None), P("data", None, None),
                   P("data", None, None)),
-        out_specs=(P("data", None), P("data")),
-        check_vma=False)
+        out_specs=(P("data", None), P("data")))
     out, aux_sh = fn(xf, p["router"], p["wi"], p["wg"], p["wo"])
     aux = jnp.mean(aux_sh)
     out = out.reshape(b, s, d)
