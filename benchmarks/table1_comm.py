@@ -159,6 +159,67 @@ def sync_lowering(csv_rows: list | None = None, *,
         assert sh["scatter_leg_bytes"] * 2 <= rec["flat"]["bytes_on_wire"]
 
 
+def sync_lowering_quantized(csv_rows: list | None = None, *,
+                            arch: str = "starcoder2-3b",
+                            meshes: tuple[tuple[str, str], ...] = (
+                                ("4x2", "dp"), ("2x2x2", "fsdp")),
+                            json_records: list | None = None) -> None:
+    """The quantized-sync wire budget, flat vs flat_sharded (README
+    §Quantized sync on the sharded layout).
+
+    Quantized, the flat layout pays TWO bucket-sized f32 all-reduces per
+    sync (the delta payload + the GSPMD worker-amax for the scales); the
+    sharded layout runs in the reduce-scatter domain instead — per bucket
+    one reduce_scatter + one all_gather carrying int16 integer codes (half
+    the f32 bytes), plus ONE scalar-sized amax fold (4 bytes per model
+    tensor, `amax-fold` column) for the whole sync.  Zero payload
+    all-reduces, zero GSPMD scale collectives — asserted here and in
+    tests/test_quantized_sharded.py.
+    """
+    print("\n== per-sync lowering, QUANTIZED: flat vs flat_sharded "
+          f"({arch} smoke) ==")
+    print(f"{'mesh':>8s} {'policy':>6s} {'layout':>12s} {'payload-ar':>10s} "
+          f"{'rs+ag':>6s} {'amax-fold':>10s} {'bytes/sync':>12s} "
+          f"{'rs-wire':>10s}")
+    env = dict(os.environ, PYTHONPATH=_SRC +
+               os.pathsep + os.environ.get("PYTHONPATH", ""))
+    for mesh, policy in meshes:
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.sync_compare",
+             "--arch", arch, "--mesh", mesh, "--policy", policy,
+             "--quantize", "--param-layout", "flat,flat_sharded"],
+            capture_output=True, text=True, env=env, timeout=600)
+        assert out.returncode == 0, out.stderr[-2000:]
+        rec = json.loads(out.stdout)
+        if json_records is not None:
+            json_records.append({"mesh": mesh, "policy": policy,
+                                 "arch": arch, "quantize": True,
+                                 "sync": rec})
+        for layout in ("flat", "flat_sharded"):
+            r = rec[layout]
+            fold = (f"{r['amax_fold_ops']}x{r['amax_fold_bytes']}B"
+                    if r["amax_fold_ops"] else "-")
+            print(f"{mesh:>8s} {policy:>6s} {layout:>12s} "
+                  f"{r['payload_all_reduce_ops']:10d} "
+                  f"{r['reduce_scatter_ops'] + r['all_gather_ops']:6d} "
+                  f"{fold:>10s} {r['bytes_on_wire']:12,d} "
+                  f"{r['rs_wire_bytes']:10,d}")
+            if csv_rows is not None:
+                base = f"table1_comm/sync_q_{mesh}_{policy}_{layout}"
+                csv_rows.append((f"{base}/bytes_on_wire", "",
+                                 str(r["bytes_on_wire"])))
+                csv_rows.append((f"{base}/payload_all_reduces", "",
+                                 str(r["payload_all_reduce_ops"])))
+        sh = rec["flat_sharded"]
+        assert sh["payload_all_reduce_ops"] == 0
+        assert sh["amax_fold_ops"] <= 1
+        assert sh["reduce_scatter_ops"] == sh["n_buckets"]
+        assert sh["all_gather_ops"] == sh["n_buckets"]
+        assert sh["amax_fold_bytes"] <= 4 * sh["n_leaves"] + 64
+        # the integer wire beats the quantized flat sync by >= 2x
+        assert sh["bytes_on_wire"] * 2 <= rec["flat"]["bytes_on_wire"]
+
+
 def main() -> None:
     import argparse
 
@@ -170,6 +231,7 @@ def main() -> None:
     records: list = []
     run()
     sync_lowering(json_records=records)
+    sync_lowering_quantized(json_records=records)
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"records": records}, f, indent=1)

@@ -340,7 +340,18 @@ class RoundEngine:
             the next round's first `overlap_depth` steps; bucketed mode
             only; depth 0 is bitwise the blocking trajectory — see the
             module docstring.  `flush()` applies the last in-flight sync.)
-    shards: chunk count for layout="flat_sharded" (0 -> workers).
+    shards: chunk count for layout="flat_sharded" (0 -> workers, or the
+            full device count when a mesh is given).
+    mesh:   optional jax Mesh (layout="flat_sharded" only): the spec then
+            carries the mesh + worker/shard axes (from `policy`), the state
+            is laid out onto it at init (global arrays — works across real
+            processes, launch/multihost.py), and the sync executes its
+            explicit reduce_scatter / all_gather collectives instead of the
+            host flat path.  Bitwise-equal to the mesh-less engine for
+            quantized sync (integer-code reduction, core/sync.py) and for
+            any sync when the worker-axis product is 2.
+    policy: sharding policy naming the mesh's worker axes ("dp" | "fsdp");
+            only read when a mesh is given.
     batch_fn: host-data override — `fn(step) -> batch [W, B_loc, ...]`
             replacing the built-in TokenStream (e.g. a VisionStream source
             for the paper's ViT runs).  Implies data="host".
@@ -354,6 +365,7 @@ class RoundEngine:
                  seed: int = 0, mode: str = "bucketed", data: str = "device",
                  layout: str = "tree", sync: str = "blocking",
                  overlap_depth: int = 0, shards: int = 0,
+                 mesh=None, policy: str = "dp",
                  donate: bool | None = None,
                  batch_fn: Callable | None = None):
         assert mode in ("bucketed", "legacy"), mode
@@ -361,6 +373,14 @@ class RoundEngine:
         assert layout in ("tree", "flat", "flat_sharded"), layout
         assert sync in ("blocking", "overlap"), sync
         assert overlap_depth >= 0, overlap_depth
+        assert mesh is None or layout == "flat_sharded", \
+            "a mesh drives the explicit-collective sync: layout=flat_sharded"
+        if mesh is not None:
+            got = pm.worker_count(policy, mesh)
+            assert got == workers, \
+                f"policy {policy!r} on this mesh has {got} workers, " \
+                f"engine built with {workers}"
+        self.mesh, self.policy = mesh, policy
         assert sync == "blocking" or mode == "bucketed", \
             "overlapped sync runs through the bucketed program"
         assert batch_fn is None or data == "host", \
@@ -399,10 +419,20 @@ class RoundEngine:
                 mod = api.get_module(self.cfg)
                 params_single = pm.abstract_params(mod.param_defs(self.cfg),
                                                    jnp.float32)
-            self.spec = (flat.ShardedFlatSpace(params_single,
-                                               self.shards or self.workers)
-                         if self.layout == "flat_sharded"
-                         else flat.FlatParamSpace(params_single))
+            if self.layout == "flat_sharded" and self.mesh is not None:
+                waxes = pm.worker_mesh_axes(self.policy, self.mesh)
+                saxes = tuple(a for a in self.mesh.axis_names
+                              if a not in waxes)
+                sizes = pm.mesh_axis_sizes(self.mesh)
+                shards = self.shards or math.prod(sizes.values())
+                self.spec = flat.ShardedFlatSpace(
+                    params_single, shards, mesh=self.mesh,
+                    worker_axes=waxes, shard_axes=saxes)
+            elif self.layout == "flat_sharded":
+                self.spec = flat.ShardedFlatSpace(params_single,
+                                                  self.shards or self.workers)
+            else:
+                self.spec = flat.FlatParamSpace(params_single)
         return self.spec
 
     def init_state(self, params_single: Pytree | None = None) -> Pytree:
@@ -415,7 +445,26 @@ class RoundEngine:
                               self.workers)
         if self.layout != "tree":
             state = flat.to_flat_state(self._ensure_spec(params_single), state)
+        if self.mesh is not None:
+            state = self._to_global(state)
         return state
+
+    def _to_global(self, state: Pytree) -> Pytree:
+        """Lay the flat state out onto the engine's mesh as global arrays
+        (flat.make_global: works single-process and across real
+        `jax.distributed` processes alike)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        sspec = flat.flat_state_specs(self.run_cfg, self.spec.worker_axes,
+                                      self.spec)
+        # PartitionSpec subclasses tuple (a pytree node): wrap in the opaque
+        # NamedSharding so flatten_up_to treats each spec as one leaf
+        ns = jax.tree.map(lambda s: NamedSharding(self.mesh, s), sspec,
+                          is_leaf=lambda x: isinstance(x, P))
+        leaves, td = jax.tree.flatten(state)
+        shardings = td.flatten_up_to(ns)
+        return jax.tree.unflatten(td, [flat.make_global(x, self.mesh, sh.spec)
+                                       for x, sh in zip(leaves, shardings)])
 
     def params_single(self, state: Pytree) -> Pytree:
         """Worker-0 params as the model pytree, whatever the layout — the

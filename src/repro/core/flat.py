@@ -224,6 +224,59 @@ class ShardedFlatSpace(FlatParamSpace):
 
 
 # --------------------------------------------------------------------------
+# State shardings for the flat layouts
+# --------------------------------------------------------------------------
+
+def axis_entry(axes):
+    """Mesh-axis name tuple -> PartitionSpec entry (None / name / tuple) —
+    the one normalization every mesh-carrying call site shares."""
+    if not isinstance(axes, tuple):
+        return axes                       # already a name or None
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def flat_state_specs(run_cfg, waxes, spec):
+    """PartitionSpec tree for the flat runtime state.  `waxes` is the worker
+    mesh-axis tuple (or an already-normalized PartitionSpec entry).
+
+    Plain flat: the worker axis over the worker mesh axes; the flat dim
+    replicated (per-leaf inner shardings don't survive concatenation).
+    flat_sharded: the flat dim additionally splits into contiguous chunks
+    over the non-worker mesh axes — params AND optimizer moments stored at
+    1/S per device, anchors/outer momentum likewise — which is what lets
+    the fsdp policy run a flat layout at all."""
+    from jax.sharding import PartitionSpec as P
+    waxes = axis_entry(waxes)
+    flat_dim = axis_entry(getattr(spec, "shard_axes", ()))
+    bufs = lambda lead: {b: P(*(lead + (flat_dim,))) for b in spec.buckets}
+    wlead, alead = (waxes,), ()
+    if run_cfg.optimizer == "sgd":
+        opt = {"mu": bufs(wlead), "step": P()}
+    else:
+        opt = {"m": bufs(wlead), "v": bufs(wlead), "step": P()}
+    out = {"params": bufs(wlead), "opt": opt}
+    if run_cfg.sync_quantize or run_cfg.outer_momentum > 0.0:
+        out["anchor"] = bufs(alead)
+        if run_cfg.outer_momentum > 0.0:
+            out["outer_mu"] = bufs(alead)
+    return out
+
+
+def make_global(x, mesh, pspec):
+    """One host-replicated value -> a global array laid out on `mesh`.
+    `make_array_from_callback` builds the buffer from its addressable shards
+    only, so the same call works single-process (simulated devices) and
+    across real `jax.distributed` processes — every process holds the
+    identical host value, each contributes its own shards.  Shared by
+    RoundEngine init and the multihost harness so the two stay bitwise
+    comparable."""
+    from jax.sharding import NamedSharding
+    xnp = np.asarray(x)
+    return jax.make_array_from_callback(xnp.shape, NamedSharding(mesh, pspec),
+                                        lambda idx: xnp[idx])
+
+
+# --------------------------------------------------------------------------
 # Runtime-state conversion (the RoundEngine's layout="flat" entry points)
 # --------------------------------------------------------------------------
 

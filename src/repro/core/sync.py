@@ -6,8 +6,26 @@ moments — matching the paper's implementation).
 
 Beyond-paper options (recorded separately in EXPERIMENTS.md §Perf):
   * outer Nesterov momentum on the sync delta (DiLoCo-style),
-  * int8-quantized sync deltas (8x cross-pod DCI traffic reduction).
+  * int8-quantized sync deltas (README §Quantized sync: the wire carries
+    quantized integer codes, cutting cross-pod DCI bytes per sync).
 Both require an `anchor` (the params at the previous sync) carried in state.
+
+## The RS-domain quantization rule
+
+All quantized paths mean the integer *codes* q = clip(round(d/s*127)) and
+dequantize once, after the mean: `step = (Σ_i q_i / W) * (s / 127)`.  Σq is a
+sum of integers — exact in ANY summation order (|Σ| < 2^24) — so the worker
+mean is bitwise-identical whether it runs as a local `jnp.mean`, a GSPMD
+all-reduce, an explicit reduce_scatter, or a multi-process gloo collective.
+That is what lets the three layouts (and real multi-host execution,
+launch/multihost.py) stay bitwise-equal under quantization, which a mean of
+dequantized f32 values (the previous formulation) cannot guarantee.
+
+Per-tensor scales are max statistics, also exact under any fold: on the
+sharded layout each device computes *shard-local partial amaxes* per tensor
+and one tiny `pmax` over the whole mesh folds them ([Σ #leaves] floats — the
+only collective besides the RS/AG legs; no GSPMD per-element scale
+collectives).
 
 Layouts (`make_sync(run_cfg, spec=...)`):
   * tree (spec=None) — state mirrors the model pytree; the worker mean
@@ -20,15 +38,20 @@ Layouts (`make_sync(run_cfg, spec=...)`):
     via the spec's segment reductions, keeping the two layouts bitwise-equal.
   * flat_sharded (spec=ShardedFlatSpace carrying a mesh) — the worker mean
     decomposes into its two halves, written as explicit collectives: one
-    `psum_scatter` (reduce_scatter — each worker reduces the contiguous
-    1/W chunk it owns) and one `all_gather` (rebuild the consensus) per
-    dtype bucket.  Without a mesh the same state layout runs the flat path
+    `psum_scatter` (reduce_scatter) and one `all_gather` per dtype bucket.
+    Quantized, the two legs carry the integer codes in the exact
+    accumulation dtype (int16 while W*127 < 2^15, else int32) — half the
+    f32 wire bytes — and the amax fold above replaces the GSPMD scale
+    collectives.  Without a mesh the same state layout runs the flat path
     above on the padded buffers, bitwise-equal to tree/flat.
 
 The two halves are also exposed separately (`make_sync_begin` /
 `make_sync_apply`) so the RoundEngine's `--sync overlap` mode can issue the
 reduce at the round boundary and defer the gather/apply past the first local
-steps of the next round (core/engine.py).
+steps of the next round (core/engine.py).  Quantized pending syncs are
+`{"q": codes-mean-or-sum, "scale": per-element scales}` — the apply leg
+dequantizes and runs the outer update in one fused pass
+(kernels/sync_update.py `sync_apply_update`).
 """
 from __future__ import annotations
 
@@ -37,6 +60,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 
 def worker_mean(tree):
@@ -57,12 +81,21 @@ def _guarded_scale(amax):
     return jnp.where(amax > 0.0, amax, 1.0)
 
 
+def _quantize_codes(d, scale):
+    """Integer codes of a delta under elementwise (broadcastable) scales:
+    clip(round(d/s*127)) ∈ [-127, 127], kept in f32 (integer-valued — the
+    domain every quantized worker mean runs in)."""
+    return jnp.clip(jnp.round(d / scale * 127.0), -127.0, 127.0)
+
+
 def _quantize_delta(delta):
-    """Symmetric per-tensor int8 quantization of the sync delta."""
+    """Symmetric per-tensor int8 round-trip of a delta pytree — the
+    reference a single worker's wire codes dequantize to (property-tested in
+    tests/test_quantize_props.py)."""
     def one(d):
         a = _guarded_scale(jnp.max(jnp.abs(d)))
-        q = jnp.clip(jnp.round(d / a * 127.0), -127, 127).astype(jnp.int8)
-        return q.astype(jnp.float32) * (a / 127.0)
+        q = _quantize_codes(d, a)
+        return q.astype(jnp.int8).astype(jnp.float32) * (a / 127.0)
     return jax.tree.map(one, delta)
 
 
@@ -77,11 +110,22 @@ def flat_delta_scales(spec, bucket: str, p, anchor):
     return spec.spread(bucket, _guarded_scale(spec.segment_max(bucket, d)))
 
 
-def _q_roundtrip(d, scale):
-    """int8 quantize/dequantize one bucket delta [W, N] with elementwise
-    scales [N] — the same math the fused kernel and the tree path run."""
-    q = jnp.clip(jnp.round(d / scale[None] * 127.0), -127, 127)
-    return q.astype(jnp.int8).astype(jnp.float32) * (scale[None] / 127.0)
+def partial_segment_amax(d, seg, n_segments: int):
+    """Shard-local per-tensor partial amax of one bucket block: d [W_loc,
+    n_blk] delta rows, seg [n_blk] local segment ids -> [n_segments] f32.
+    Segments absent from this shard report the max-identity (-inf); a max
+    fold over all shards (np.maximum / lax.pmax) therefore reconstructs the
+    full-tensor amax *exactly* — max is exact, so shard-local partials fold
+    to bitwise the unsharded statistic for arbitrary splits (property-tested
+    in tests/test_quantize_props.py)."""
+    return jax.ops.segment_max(jnp.max(jnp.abs(d), axis=0), seg,
+                               num_segments=n_segments)
+
+
+def wire_dtype(w: int):
+    """Smallest integer dtype that holds Σ_i q_i exactly for W workers —
+    the RS/AG wire payload type for quantized sharded sync."""
+    return jnp.int16 if w * 127 < 2 ** 15 else jnp.int32
 
 
 # --------------------------------------------------------------------------
@@ -89,10 +133,9 @@ def _q_roundtrip(d, scale):
 # --------------------------------------------------------------------------
 
 def _axt(axes: tuple[str, ...]):
-    """Mesh-axis tuple -> PartitionSpec entry."""
-    if not axes:
-        return None
-    return axes[0] if len(axes) == 1 else tuple(axes)
+    """Mesh-axis tuple -> PartitionSpec entry (the shared normalization)."""
+    from repro.core.flat import axis_entry
+    return axis_entry(axes)
 
 
 def _use_collectives(spec) -> bool:
@@ -134,16 +177,83 @@ def _ag_mean(spec, pending):
     return out[0]
 
 
+def _rs_quantized_begin(spec, params, anchor):
+    """The RS-domain quantized reduce, all dtype buckets in ONE shard_map.
+
+    Per device: local delta block, shard-local partial amaxes per tensor,
+    one tiny `pmax` over the whole mesh (a [Σ #leaves]-float fold — the only
+    scale collective), int8 codes, then ONE psum_scatter per bucket carrying
+    the codes in the exact accumulation dtype (`wire_dtype`).  Returns
+    pending {"q": {bucket: [W, N/W] int}, "scale": {bucket: [N] f32}} — "q"
+    holds the *sum* Σq (still to be divided by W at apply time)."""
+    from repro.models.common import shard_map_compat
+
+    wt, st = _axt(spec.worker_axes), _axt(spec.shard_axes)
+    buckets = spec.buckets
+    nseg = {b: spec.bucket_leaves(b) for b in buckets}
+    seg = {b: jnp.asarray(spec.segment_ids(b)) for b in buckets}
+    w = jax.tree.leaves(params)[0].shape[0]
+    wdt = wire_dtype(w)
+
+    def body(p, a, sg):
+        d = {b: p[b].astype(jnp.float32) - a[b].astype(jnp.float32)[None]
+             for b in buckets}
+        part = jnp.concatenate(
+            [partial_segment_amax(d[b], sg[b], nseg[b]) for b in buckets])
+        full = jax.lax.pmax(part, spec.worker_axes + spec.shard_axes)
+        off, scales = 0, {}
+        for b in buckets:
+            per_leaf = _guarded_scale(full[off:off + nseg[b]])
+            off += nseg[b]
+            # clamped gather == spec.spread: pad ids read the last leaf's
+            # scale, harmless — pad deltas are exactly zero
+            scales[b] = per_leaf[sg[b]]
+        qs = {b: jax.lax.psum_scatter(
+                  _quantize_codes(d[b], scales[b][None]).astype(wdt),
+                  spec.worker_axes, scatter_dimension=1, tiled=True)
+              for b in buckets}
+        return qs, scales
+
+    in_specs = ({b: P(wt, st) for b in buckets},
+                {b: P(st) for b in buckets},
+                {b: P(st) for b in buckets})
+    out_specs = ({b: P(wt, st) for b in buckets},
+                 {b: P(st) for b in buckets})
+    qs, scales = shard_map_compat(body, spec.mesh, in_specs=in_specs,
+                                  out_specs=out_specs)(params, anchor, seg)
+    return {"q": qs, "scale": scales}
+
+
+def _ag_codes(spec, qs):
+    """Gather leg of the quantized sync: the worker-owned Σq chunks [W, N/W]
+    back to the full [N] code sums via ONE all_gather per bucket (one
+    shard_map; the payload stays in the integer wire dtype)."""
+    from repro.models.common import shard_map_compat
+
+    wt, st = _axt(spec.worker_axes), _axt(spec.shard_axes)
+
+    def body(s):
+        return {b: jax.lax.all_gather(s[b], spec.worker_axes, axis=1,
+                                      tiled=True) for b in s}
+
+    out = shard_map_compat(body, spec.mesh,
+                           in_specs=({b: P(wt, st) for b in qs},),
+                           out_specs={b: P(None, st) for b in qs})(qs)
+    return {b: out[b][0] for b in out}
+
+
 def make_sync_begin(run_cfg, spec=None):
     """First half of the sync: the reduce.  begin(state) -> pending, a pure
     function of the pre-sync state (no state mutation).
 
-    pending per bucket/leaf, in f32: the worker-mean params (plain sync) or
-    the worker-mean (de)quantized delta from the anchor (quantize/momentum
-    sync).  Under a mesh-carrying ShardedFlatSpace the mean is an explicit
-    psum_scatter over the worker axes — one reduce_scatter per dtype bucket
-    on the wire — and pending stays worker-sharded [W, N/W]; the matching
-    all_gather lives in make_sync_apply (the deferrable leg)."""
+    pending per bucket/leaf: the worker-mean params in f32 (plain sync), the
+    worker-mean delta from the anchor (momentum-only sync), or — quantized —
+    {"q": worker-mean integer codes, "scale": per-element scales}.  Under a
+    mesh-carrying ShardedFlatSpace the mean is an explicit psum_scatter over
+    the worker axes — one reduce_scatter per dtype bucket on the wire,
+    carrying integer codes when quantized — and pending stays worker-sharded
+    [W, N/W] (codes as the un-divided sum Σq); the matching all_gather lives
+    in make_sync_apply (the deferrable leg)."""
     quantize = run_cfg.sync_quantize
     mom = run_cfg.outer_momentum
     coll = _use_collectives(spec)
@@ -157,20 +267,24 @@ def make_sync_begin(run_cfg, spec=None):
             return jax.tree.map(
                 lambda p: mean_w(p.astype(jnp.float32)), params)
         anchor = state["anchor"]
+        if quantize and coll:
+            return _rs_quantized_begin(spec, params, anchor)
         delta = jax.tree.map(
             lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
             params, anchor)
         if quantize:
             if spec is None:
-                delta = _quantize_delta(delta)
+                scales = jax.tree.map(
+                    lambda d: _guarded_scale(jnp.max(jnp.abs(d))), delta)
             else:
-                # per-tensor scales via the spec's segment reductions; under
-                # a mesh GSPMD lowers the max/segment ops with its own small
-                # collectives — only the delta mean itself is the RS leg
-                delta = {b: _q_roundtrip(
-                             d, flat_delta_scales(spec, b, params[b],
-                                                  anchor[b]))
-                         for b, d in delta.items()}
+                scales = {b: flat_delta_scales(spec, b, params[b], anchor[b])
+                          for b in spec.buckets}
+            qmean = jax.tree.map(
+                lambda d, s: jnp.mean(_quantize_codes(d, s[None] if
+                                                      jnp.ndim(s) else s),
+                                      axis=0),
+                delta, scales)
+            return {"q": qmean, "scale": scales}
         return jax.tree.map(mean_w, delta)
 
     return begin
@@ -189,7 +303,9 @@ def make_sync_apply(run_cfg, spec=None):
         while the reduce was in flight, x_i <- x_i + (consensus - entry_i).
     Under a mesh-carrying ShardedFlatSpace the gather is an explicit
     all_gather over the worker axes — the deferred leg of the decomposed
-    all-reduce."""
+    all-reduce; quantized it carries the integer code sums, divided by W and
+    dequantized here (fused with the outer Nesterov + anchor update in one
+    kernels/sync_update.py `sync_apply_update` pass per bucket)."""
     quantize = run_cfg.sync_quantize
     mom = run_cfg.outer_momentum
     coll = _use_collectives(spec)
@@ -211,21 +327,47 @@ def make_sync_apply(run_cfg, spec=None):
 
     def apply(state, pending, entry_params=None):
         params = state["params"]
-        mean = jax.tree.map(gather, pending)
         if not quantize and mom == 0.0:
+            mean = jax.tree.map(gather, pending)
             return {**state, "params": to_params(mean, params, entry_params)}
         new_state = dict(state)
-        if mom > 0.0:
-            mu = jax.tree.map(lambda m, d: mom * m + d,
-                              state["outer_mu"], mean)
-            step = jax.tree.map(lambda m, d: mom * m + d, mu, mean)
-            new_state["outer_mu"] = mu
+        if quantize:
+            if coll:
+                w = jax.tree.leaves(params)[0].shape[0]
+                qmean = {b: q.astype(jnp.float32) / w
+                         for b, q in _ag_codes(spec, pending["q"]).items()}
+            else:
+                qmean = pending["q"]
+            scales = pending["scale"]
+            step_in = qmean
         else:
-            step = mean
-        new_anchor = jax.tree.map(
-            lambda a, s: (a.astype(jnp.float32) + s).astype(a.dtype),
-            state["anchor"], step)
+            step_in = jax.tree.map(gather, pending)
+            scales = None
+        mu_in = state["outer_mu"] if mom > 0.0 else None
+        if spec is not None:
+            new_anchor = {}
+            new_mu = {} if mom > 0.0 else None
+            for b in spec.buckets:
+                a2, mu2 = kops.sync_apply_update(
+                    step_in[b], state["anchor"][b],
+                    scale=scales[b] if quantize else None,
+                    mu=mu_in[b] if mom > 0.0 else None, momentum=mom)
+                new_anchor[b] = a2
+                if mom > 0.0:
+                    new_mu[b] = mu2
+        else:
+            ls, treedef = jax.tree.flatten(step_in)
+            la = treedef.flatten_up_to(state["anchor"])
+            lsc = treedef.flatten_up_to(scales) if quantize else [None] * len(ls)
+            lmu = treedef.flatten_up_to(mu_in) if mom > 0.0 else [None] * len(ls)
+            outs = [kref.sync_apply_update(s, a, scale=sc, mu=m, momentum=mom)
+                    for s, a, sc, m in zip(ls, la, lsc, lmu)]
+            new_anchor = jax.tree.unflatten(treedef, [o[0] for o in outs])
+            new_mu = (jax.tree.unflatten(treedef, [o[1] for o in outs])
+                      if mom > 0.0 else None)
         new_state["anchor"] = new_anchor
+        if mom > 0.0:
+            new_state["outer_mu"] = new_mu
         new_state["params"] = to_params(new_anchor, params, entry_params)
         return new_state
 
@@ -239,72 +381,43 @@ def make_sync(run_cfg, spec=None):
     anchor/outer_mu {bucket: [N]}.  A mesh-carrying ShardedFlatSpace
     composes the two explicit halves back-to-back: the blocking sync is then
     one reduce_scatter + one all_gather per bucket instead of a full
-    all-reduce."""
-    if _use_collectives(spec):
-        begin = make_sync_begin(run_cfg, spec)
-        apply_ = make_sync_apply(run_cfg, spec)
-
-        def sync_sharded(state):
-            return apply_(state, begin(state))
-
-        return sync_sharded
-
+    all-reduce (quantized: integer-code payloads + one tiny amax pmax).
+    A mesh-less flat spec runs the one-pass fused kernel instead."""
     quantize = run_cfg.sync_quantize
     mom = run_cfg.outer_momentum
-    outer_lr = 1.0
 
-    def sync_flat(state):
-        params = state["params"]
-        if not quantize and mom == 0.0:
-            return {**state, "params": worker_mean(params)}
-        anchor = state["anchor"]
-        new_state = dict(state)
-        new_params, new_anchor = {}, {}
-        new_mu = {} if mom > 0.0 else None
-        for b in spec.buckets:
-            p, a = params[b], anchor[b]
-            scale = flat_delta_scales(spec, b, p, a) if quantize else None
-            mu = state["outer_mu"][b] if mom > 0.0 else None
-            p2, a2, mu2 = kops.sync_flat_update(p, a, scale=scale, mu=mu,
-                                                momentum=mom)
-            new_params[b], new_anchor[b] = p2, a2
+    if spec is not None and not _use_collectives(spec):
+        def sync_flat(state):
+            params = state["params"]
+            if not quantize and mom == 0.0:
+                return {**state, "params": worker_mean(params)}
+            anchor = state["anchor"]
+            new_state = dict(state)
+            new_params, new_anchor = {}, {}
+            new_mu = {} if mom > 0.0 else None
+            for b in spec.buckets:
+                p, a = params[b], anchor[b]
+                scale = flat_delta_scales(spec, b, p, a) if quantize else None
+                mu = state["outer_mu"][b] if mom > 0.0 else None
+                p2, a2, mu2 = kops.sync_flat_update(p, a, scale=scale, mu=mu,
+                                                    momentum=mom)
+                new_params[b], new_anchor[b] = p2, a2
+                if mom > 0.0:
+                    new_mu[b] = mu2
+            new_state["params"], new_state["anchor"] = new_params, new_anchor
             if mom > 0.0:
-                new_mu[b] = mu2
-        new_state["params"], new_state["anchor"] = new_params, new_anchor
-        if mom > 0.0:
-            new_state["outer_mu"] = new_mu
-        return new_state
+                new_state["outer_mu"] = new_mu
+            return new_state
 
-    def sync(state):
-        params = state["params"]
-        if not quantize and mom == 0.0:
-            return {**state, "params": worker_mean(params)}
+        return sync_flat
 
-        anchor = state["anchor"]  # [no worker axis]
-        # per-worker delta from the anchor
-        delta = jax.tree.map(
-            lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
-            params, anchor)
-        if quantize:
-            delta = _quantize_delta(delta)
-        mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
+    # tree layout and the mesh-carrying sharded layout compose the two
+    # explicit halves back-to-back (identical op sequence to the fused flat
+    # kernel, so the layouts stay bitwise-equal)
+    begin = make_sync_begin(run_cfg, spec)
+    apply_ = make_sync_apply(run_cfg, spec)
 
-        new_state = dict(state)
-        if mom > 0.0:
-            mu = jax.tree.map(
-                lambda m, d: mom * m + d, state["outer_mu"], mean_delta)
-            step_dir = jax.tree.map(      # Nesterov
-                lambda m, d: mom * m + d, mu, mean_delta)
-            new_state["outer_mu"] = mu
-        else:
-            step_dir = mean_delta
-        new_anchor = jax.tree.map(
-            lambda a, s: (a.astype(jnp.float32) + outer_lr * s).astype(a.dtype),
-            anchor, step_dir)
-        new_state["anchor"] = new_anchor
-        new_state["params"] = jax.tree.map(
-            lambda a, p: jnp.broadcast_to(a[None], p.shape).astype(p.dtype),
-            new_anchor, params)
-        return new_state
+    def sync_composed(state):
+        return apply_(state, begin(state))
 
-    return sync_flat if spec is not None else sync
+    return sync_composed

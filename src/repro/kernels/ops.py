@@ -79,6 +79,20 @@ def sync_flat_update(p, anchor, *, scale=None, mu=None, momentum: float = 0.0):
                                interpret=(_BACKEND == "interpret"))
 
 
+def sync_apply_update(step_in, anchor, *, scale=None, mu=None,
+                      momentum: float = 0.0):
+    """Fused gather-leg apply for one flat bucket: dequantize the worker-mean
+    int8 codes (when `scale` is given), outer Nesterov, anchor update — one
+    pass. Returns (new_anchor, new_mu | None); see kernels/sync_update.py."""
+    if _BACKEND == "jnp":
+        return ref.sync_apply_update(step_in, anchor, scale=scale, mu=mu,
+                                     momentum=momentum)
+    from repro.kernels import sync_update as _k
+    return _k.sync_apply_update(step_in, anchor, scale=scale, mu=mu,
+                                momentum=momentum,
+                                interpret=(_BACKEND == "interpret"))
+
+
 def swiglu(x, wg, wi):
     """Fused silu(x@wg)*(x@wi) — the MLP hot spot."""
     if _BACKEND == "jnp":

@@ -100,12 +100,21 @@ def sync_flat_update(p, anchor, *, scale=None, mu=None, momentum=0.0):
     momentum > 0.  Returns (new_p [W, N], new_anchor [N], new_mu [N] | None).
     Elementwise math identical to the per-leaf tree path in core/sync.py, so
     the two layouts stay bitwise-equal (tests/test_flat.py).
+
+    Quantized mean semantics (the RS-domain rule, core/sync.py): the worker
+    mean runs over the integer *codes* q ∈ [-127, 127], not the dequantized
+    values — Σq is exact in any summation order (integers < 2^24 are exact
+    in f32), so the sharded layout's reduce_scatter of the codes is bitwise
+    this kernel regardless of collective ordering or backend (gloo,
+    in-process XLA, TPU ICI); dequantization happens once, after the mean.
     """
     d = p.astype(jnp.float32) - anchor.astype(jnp.float32)[None]
     if scale is not None:
-        q = jnp.clip(jnp.round(d / scale[None] * 127.0), -127, 127)
-        d = q.astype(jnp.int8).astype(jnp.float32) * (scale[None] / 127.0)
-    step = jnp.mean(d, axis=0)
+        q = jnp.clip(jnp.round(d / scale[None] * 127.0), -127.0, 127.0)
+        qmean = jnp.mean(q, axis=0)
+        step = qmean * (scale / 127.0)
+    else:
+        step = jnp.mean(d, axis=0)
     new_mu = None
     if momentum > 0.0:
         new_mu = momentum * mu + step
@@ -113,6 +122,25 @@ def sync_flat_update(p, anchor, *, scale=None, mu=None, momentum=0.0):
     new_anchor = (anchor.astype(jnp.float32) + step).astype(anchor.dtype)
     new_p = jnp.broadcast_to(new_anchor[None], p.shape).astype(p.dtype)
     return new_p, new_anchor, new_mu
+
+
+def sync_apply_update(step_in, anchor, *, scale=None, mu=None, momentum=0.0):
+    """Fused gather-leg apply: dequant + outer Nesterov + anchor update.
+
+    step_in [N] f32 — the worker-mean integer codes qmean when `scale` is
+    given (dequantized here: step = qmean * scale/127), else the worker-mean
+    delta itself.  anchor [N]; mu [N] fp32 iff momentum > 0.  Returns
+    (new_anchor [N], new_mu [N] | None).  The op sequence after the mean is
+    exactly `sync_flat_update`'s, so blocking (fused one-pass) and overlap
+    (begin/apply split) trajectories stay bitwise-equal at depth 0.
+    """
+    step = step_in * (scale / 127.0) if scale is not None else step_in
+    new_mu = None
+    if momentum > 0.0:
+        new_mu = momentum * mu + step
+        step = momentum * new_mu + step          # Nesterov
+    new_anchor = (anchor.astype(jnp.float32) + step).astype(anchor.dtype)
+    return new_anchor, new_mu
 
 
 def swiglu(x, wg, wi):

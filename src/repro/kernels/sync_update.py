@@ -35,10 +35,15 @@ def _kernel(refs, *, momentum, quantize, n_in):
     af = a_ref[...].astype(jnp.float32)                 # [blk]
     d = p_ref[...].astype(jnp.float32) - af[None]       # [W, blk]
     if quantize:
+        # RS-domain rule (core/sync.py): mean the integer codes, dequantize
+        # once after — Σq is exact in f32 for any order, which is what keeps
+        # this pass bitwise-equal to the sharded layout's reduce_scatter of
+        # the same codes.
         s = s_ref[...]
-        q = jnp.clip(jnp.round(d / s[None] * 127.0), -127, 127)
-        d = q.astype(jnp.int8).astype(jnp.float32) * (s[None] / 127.0)
-    step = jnp.mean(d, axis=0)
+        q = jnp.clip(jnp.round(d / s[None] * 127.0), -127.0, 127.0)
+        step = jnp.mean(q, axis=0) * (s / 127.0)
+    else:
+        step = jnp.mean(d, axis=0)
     if momentum > 0.0:
         mu1 = momentum * mu_ref[...] + step
         step = momentum * mu1 + step                    # Nesterov
@@ -85,3 +90,63 @@ def sync_flat_update(p, anchor, *, scale=None, mu=None, momentum: float = 0.0,
     new_p, new_a = out[0][:, :n], out[1][:n]
     new_mu = out[2][:n] if momentum > 0.0 else None
     return new_p, new_a, new_mu
+
+
+# --------------------------------------------------------------------------
+# The gather-leg apply: dequant + outer Nesterov + anchor in one pass
+# --------------------------------------------------------------------------
+
+def _apply_kernel(refs, *, momentum, quantize, n_in):
+    in_refs, out_refs = refs[:n_in], refs[n_in:]
+    q_ref, a_ref = in_refs[0], in_refs[1]
+    s_ref = in_refs[2] if quantize else None
+    mu_ref = in_refs[2 + bool(quantize)] if momentum > 0.0 else None
+
+    step = q_ref[...]                                   # [blk] f32
+    if quantize:
+        step = step * (s_ref[...] / 127.0)
+    if momentum > 0.0:
+        mu1 = momentum * mu_ref[...] + step
+        step = momentum * mu1 + step                    # Nesterov
+        out_refs[1][...] = mu1
+    out_refs[0][...] = (a_ref[...].astype(jnp.float32)
+                        + step).astype(out_refs[0].dtype)
+
+
+@partial(jax.jit, static_argnames=("momentum", "interpret"))
+def sync_apply_update(step_in, anchor, *, scale=None, mu=None,
+                      momentum: float = 0.0, interpret: bool = False):
+    """step_in [N] f32 (the worker-mean codes qmean when `scale` is given,
+    else the mean delta); anchor [N]; scale [N] or None; mu [N] fp32 iff
+    momentum > 0.  Returns (new_anchor, new_mu | None) — the deferrable
+    gather leg of the sync in one VMEM pass; see kernels/ref.py oracle."""
+    (n,) = step_in.shape
+    quantize = scale is not None
+    blk = min(n, _BLOCK)
+    pad = (-n) % blk
+    pad1 = lambda x, v=0.0: jnp.pad(x, (0, pad), constant_values=v)
+    args = [pad1(step_in), pad1(anchor)]
+    spec1 = pl.BlockSpec((blk,), lambda i: (i,))
+    in_specs = [spec1, spec1]
+    if quantize:
+        args.append(pad1(scale, 1.0))
+        in_specs.append(spec1)
+    if momentum > 0.0:
+        args.append(pad1(mu))
+        in_specs.append(spec1)
+    out_shape = [jax.ShapeDtypeStruct((n + pad,), anchor.dtype)]
+    out_specs = [spec1]
+    if momentum > 0.0:
+        out_shape.append(jax.ShapeDtypeStruct((n + pad,), jnp.float32))
+        out_specs.append(spec1)
+
+    def body(*refs):
+        _apply_kernel(refs, momentum=momentum, quantize=quantize,
+                      n_in=len(args))
+
+    out = pl.pallas_call(body, grid=((n + pad) // blk,), in_specs=in_specs,
+                         out_specs=out_specs, out_shape=out_shape,
+                         interpret=interpret)(*args)
+    new_a = out[0][:n]
+    new_mu = out[1][:n] if momentum > 0.0 else None
+    return new_a, new_mu

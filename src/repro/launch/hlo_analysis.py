@@ -128,6 +128,17 @@ def collective_result_bytes(hlo_text: str) -> dict[str, int]:
     return out
 
 
+def collective_ops(hlo_text: str) -> list[dict]:
+    """Per-op collective detail: [{kind, bytes_full, bytes_result}] in HLO
+    order.  This is the view that separates a *scale* collective from a
+    *payload* collective: the quantized sharded sync's amax fold is one
+    all-reduce of 4 bytes per model tensor (launch/sync_compare classifies
+    any all-reduce at most that size as the fold; a bucket-sized all-reduce
+    would be a lowering regression)."""
+    return [{"kind": kind, "bytes_full": full, "bytes_result": res}
+            for kind, _, full, res in _iter_collectives(hlo_text)]
+
+
 def collective_counts(hlo_text: str) -> dict[str, int]:
     """Number of collective *ops* per kind (start/done pairs count once).
 

@@ -1,35 +1,82 @@
-"""Multi-host / multi-pod process bootstrap for the production mesh.
+"""Multi-host process bootstrap + a REAL multi-process execution path.
 
-On real TPU v5e, each host owns 4 chips; a 16x16 pod is 64 hosts and the
-2-pod job is 128. `initialize()` wires `jax.distributed`, then
-`make_production_mesh()` (launch/mesh.py) builds the global mesh over
-`jax.devices()` exactly as the dry-run does over placeholder devices —
-the same `train_round` / `serve_step` programs run unchanged.
+Two jobs:
 
-Environment (set by scripts/launch_v5e_pod.sh):
+1. Production bootstrap (TPU pods).  On real TPU v5e, each host owns 4
+   chips; a 16x16 pod is 64 hosts and the 2-pod job is 128.  `initialize()`
+   wires `jax.distributed`, then `make_production_mesh()` (launch/mesh.py)
+   builds the global mesh over `jax.devices()` exactly as the dry-run does
+   over placeholder devices — the same `train_round` / `serve_step` programs
+   run unchanged.
+
+2. CPU multi-process execution (the thing this module can actually *run*
+   anywhere): `run()` executes the sharded sync — and full RoundEngine
+   rounds — across N real `jax.distributed` CPU processes with gloo
+   collectives.  Every process holds 1/N of the devices of the same global
+   mesh the single-process debug runs use; the explicit reduce_scatter /
+   all_gather legs of the flat_sharded sync (core/sync.py) then cross true
+   process boundaries.  Quantized sync is asserted BITWISE against the
+   process-local host path: the worker mean runs over integer codes, so no
+   collective ordering — in-process XLA or gloo — can change a bit.  The
+   pytest harness (tests/test_multihost.py) spawns the processes and
+   additionally checks the multi-process digests against a single-process
+   8-simulated-device run of this same module.
+
+Spawn it yourself (the multihost CPU runbook, README §Multihost):
+
+  PYTHONPATH=src python -m repro.launch.multihost \
+      --spawn 2 --total-devices 8 --mesh 2x2x2 --policy fsdp --quantize
+
+Worker environment (set by --spawn, scripts/launch_v5e_pod.sh, or you):
   REPRO_COORDINATOR   host:port of process 0
   REPRO_NUM_PROCESSES total process count
   REPRO_PROCESS_ID    this process's index
+
+NOTE: jax is imported lazily everywhere in this module so `main()` can pin
+the per-process simulated-device count (XLA_FLAGS) before jax initializes.
 """
 from __future__ import annotations
 
+import argparse
+import hashlib
+import json
 import os
+import re
+import socket
+import subprocess
+import sys
 
-import jax
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
 
 
-def initialize() -> None:
+class TopologyError(RuntimeError):
+    """The device topology does not match the requested production mesh."""
+
+
+def initialize() -> bool:
+    """Wire `jax.distributed` from the REPRO_* environment; no-op (returns
+    False) when REPRO_COORDINATOR is unset (single-process dev / dry-run).
+    On the CPU backend, cross-process collectives need the gloo
+    implementation — selected here; the option is scoped to the CPU client,
+    so setting it is harmless on TPU."""
     coord = os.environ.get("REPRO_COORDINATOR")
     if not coord:
-        return  # single-process (CPU dev / dry-run) — nothing to do
+        return False
+    import jax
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass  # option absent/renamed in this jax: rely on its default
     jax.distributed.initialize(
         coordinator_address=coord,
         num_processes=int(os.environ["REPRO_NUM_PROCESSES"]),
         process_id=int(os.environ["REPRO_PROCESS_ID"]),
     )
+    return True
 
 
 def runtime_info() -> dict:
+    import jax
     return {
         "process_index": jax.process_index(),
         "process_count": jax.process_count(),
@@ -40,8 +87,383 @@ def runtime_info() -> dict:
 
 
 def assert_production_topology(*, multi_pod: bool) -> None:
+    """Raise TopologyError unless the device count matches the production
+    mesh.  A real exception, not `assert`: launch scripts run under
+    `python -O`, which strips asserts — a silently wrong topology would
+    train on a misshapen mesh."""
+    import jax
     want = 512 if multi_pod else 256
     got = len(jax.devices())
-    assert got == want, (
-        f"expected {want} chips for the "
-        f"{'2x16x16' if multi_pod else '16x16'} mesh, found {got}")
+    if got != want:
+        raise TopologyError(
+            f"expected {want} chips for the "
+            f"{'2x16x16' if multi_pod else '16x16'} mesh, found {got}")
+
+
+# --------------------------------------------------------------------------
+# The executable path: sharded sync / engine rounds across real processes
+# --------------------------------------------------------------------------
+
+def _parse_mesh(mesh: str):
+    dims = tuple(int(x) for x in mesh.split("x"))
+    axes = ("pod", "data", "model") if len(dims) == 3 else ("data", "model")
+    return dims, axes
+
+
+def _demo_params(seed: int = 0):
+    """A small mixed-dtype params pytree for the sync harness: two dtype
+    buckets, sizes chosen so the W*S chunking actually pads."""
+    import jax.numpy as jnp
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    mk = lambda *s: jnp.asarray(rng.randn(*s).astype(np.float32))
+    return {
+        "w_in": mk(13, 24), "w_attn": mk(24, 24), "bias": mk(17),
+        "w_out": mk(24, 13), "gate": mk(3, 5, 7),
+        "h_bf16": mk(9, 11).astype(jnp.bfloat16),
+        "e_bf16": mk(21).astype(jnp.bfloat16),
+    }
+
+
+def _digest(arrays) -> str:
+    import numpy as np
+    h = hashlib.sha256()
+    for a in arrays:
+        h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+    return h.hexdigest()
+
+
+def _shard_hashes(tag: str, arr) -> dict:
+    """{f"{tag}|{global index}": sha1(bytes)} over this process's shards —
+    the cross-run comparison unit: a 1-process and an N-process run of the
+    same program must produce identical hashes shard for shard."""
+    import numpy as np
+    out = {}
+    for s in arr.addressable_shards:
+        key = f"{tag}|{[(sl.start, sl.stop) for sl in s.index]}"
+        out[key] = hashlib.sha1(
+            np.ascontiguousarray(np.asarray(s.data)).tobytes()).hexdigest()
+    return out
+
+
+def run_sync(*, mesh: str = "2x2x2", policy: str = "fsdp",
+             quantize: bool = True, momentum: float = 0.0,
+             overlap: bool = False, rounds: int = 3, seed: int = 0) -> dict:
+    """Execute `rounds` sharded syncs on the global mesh — across however
+    many processes own its devices — and assert every addressable shard
+    bitwise-equal to the process-local host-path reference (the mesh-less
+    flat sync every test in tests/ anchors to).
+
+    Each round perturbs worker params with seeded host noise (identical on
+    every process) and syncs.  With `overlap`, the reduce (begin) is issued
+    at the round boundary and the gather (apply) deferred to the next round
+    — the RS leg's pending int16 code-sums then live across a program
+    boundary, exactly the engine's `--sync overlap` seam.
+
+    Bitwise holds for any mesh when `quantize` (integer-code mean) and for
+    2-worker meshes unquantized (a single f32 addition has one order);
+    callers pick configurations accordingly (tests/test_multihost.py)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import RunConfig
+    from repro.core import flat as F
+    from repro.core.sync import make_sync, make_sync_apply, make_sync_begin
+    from repro.models import param as pm
+
+    dims, axes = _parse_mesh(mesh)
+    jmesh = jax.make_mesh(dims, axes)
+    run_cfg = RunConfig(sharding=policy, sync_quantize=quantize,
+                        outer_momentum=momentum)
+    w = pm.worker_count(policy, jmesh)
+    waxes = pm.worker_mesh_axes(policy, jmesh)
+    saxes = tuple(a for a in jmesh.axis_names if a not in waxes)
+    sizes = pm.mesh_axis_sizes(jmesh)
+    shards = int(np.prod([sizes[a] for a in waxes + saxes]))
+
+    params = _demo_params(seed)
+    spec_m = F.ShardedFlatSpace(params, shards, mesh=jmesh,
+                                worker_axes=waxes, shard_axes=saxes)
+    spec_h = F.ShardedFlatSpace(params, shards)
+
+    stacked = {k: jnp.broadcast_to(v[None], (w,) + v.shape)
+               for k, v in params.items()}
+    base = {"params": spec_h.flatten(stacked, lead=1)}
+    if quantize or momentum > 0.0:
+        base["anchor"] = spec_h.flatten(params)
+    if momentum > 0.0:
+        base["outer_mu"] = {b: jnp.zeros(spec_h.buffer_size(b), jnp.float32)
+                            for b in spec_h.buckets}
+
+    sspec = F.flat_state_specs(run_cfg, waxes, spec_m)
+    put = lambda x, ps: F.make_global(x, jmesh, ps)
+
+    st_m = {k: {b: put(v[b], sspec[k][b]) for b in v}
+            for k, v in base.items()}
+    st_h = dict(base)
+
+    rng = np.random.RandomState(seed + 1)
+    noises = [{k: (rng.randn(w, *v.shape) * 0.01).astype(np.float32)
+               for k, v in params.items()} for _ in range(rounds)]
+
+    def steps(state, spec, noise_bufs_put):
+        return dict(state, params={
+            b: state["params"][b] + noise_bufs_put[b].astype(
+                state["params"][b].dtype)
+            for b in state["params"]})
+
+    if overlap:
+        begin_m = jax.jit(make_sync_begin(run_cfg, spec_m))
+        apply_m = jax.jit(make_sync_apply(run_cfg, spec_m))
+        begin_h = jax.jit(make_sync_begin(run_cfg, spec_h))
+        apply_h = jax.jit(make_sync_apply(run_cfg, spec_h))
+    else:
+        sync_m = jax.jit(make_sync(run_cfg, spec_m))
+        sync_h = jax.jit(make_sync(run_cfg, spec_h))
+
+    pend_m = pend_h = None
+    for noise in noises:
+        nb = spec_h.flatten(
+            {k: jnp.asarray(v) for k, v in noise.items()}, lead=1)
+        nb_put = {b: put(nb[b], sspec["params"][b]) for b in nb}
+        if overlap:
+            if pend_m is not None:
+                st_m = apply_m(st_m, pend_m)
+                st_h = apply_h(st_h, pend_h)
+            st_m, st_h = steps(st_m, spec_m, nb_put), steps(st_h, spec_h, nb)
+            pend_m, pend_h = begin_m(st_m), begin_h(st_h)
+        else:
+            st_m, st_h = steps(st_m, spec_m, nb_put), steps(st_h, spec_h, nb)
+            st_m, st_h = sync_m(st_m), sync_h(st_h)
+    if overlap and pend_m is not None:
+        st_m, st_h = apply_m(st_m, pend_m), apply_h(st_h, pend_h)
+
+    # every addressable shard of the distributed state must equal the
+    # corresponding slice of the (fully-replicated) host reference
+    max_diff, hashes = 0.0, {}
+    for k in sorted(st_h):
+        for b in sorted(st_h[k]):
+            ref = np.asarray(st_h[k][b], np.float32)
+            for s in st_m[k][b].addressable_shards:
+                got = np.asarray(s.data, np.float32)
+                max_diff = max(max_diff,
+                               float(np.max(np.abs(got - ref[s.index])))
+                               if got.size else 0.0)
+            hashes.update(_shard_hashes(f"{k}/{b}", st_m[k][b]))
+
+    info = runtime_info()
+    ok = max_diff == 0.0
+    # the digest is over the host reference — meaningful ONLY because the
+    # shard assertions above tie the distributed state to it bitwise, so
+    # gate it on `ok`: a broken distributed path can never produce a
+    # matching digest
+    digest = (_digest([st_h[k][b] for k in sorted(st_h)
+                       for b in sorted(st_h[k])])
+              if ok else f"MISMATCH:{max_diff:.3e}")
+    return {
+        "mode": "sync", "ok": ok, "max_abs_diff": max_diff,
+        "digest": digest,
+        "shard_hashes": hashes,
+        "mesh": mesh, "policy": policy, "workers": w, "shards": shards,
+        "quantize": quantize, "momentum": momentum, "overlap": overlap,
+        "rounds": rounds, "wire_dtype": ("int16" if quantize and
+                                         w * 127 < 2 ** 15 else
+                                         "int32" if quantize else "float32"),
+        **info,
+    }
+
+
+def run_engine(*, mesh: str = "2x2x2", policy: str = "fsdp",
+               quantize: bool = True, momentum: float = 0.0,
+               rounds: int = 2, seed: int = 0,
+               arch: str = "starcoder2-3b") -> dict:
+    """Execute full RoundEngine communication rounds (local steps + sharded
+    sync) on the global mesh, across real process boundaries: the engine is
+    built exactly as single-process — same config, same mesh axes — with
+    `mesh=` handed through so init lays global arrays onto it.
+
+    Cross-process invariant: the round program is SPMD, so every process
+    must observe the identical replicated loss scalar, and a 1-process run
+    of the same mesh produces bitwise-identical state shards when the sync
+    is quantized (the only cross-worker reduction in a dp/fsdp round whose
+    result feeds back into the state; integer codes make it
+    order-independent)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import registry as R
+    from repro.configs.base import RunConfig
+    from repro.core import schedules
+    from repro.core.engine import RoundEngine
+    from repro.optim.lr import make_lr_fn
+    from repro.models import param as pm
+
+    dims, axes = _parse_mesh(mesh)
+    jmesh = jax.make_mesh(dims, axes)
+    cfg = R.get_smoke_config(arch)
+    run_cfg = RunConfig(schedule="qsr", optimizer="adamw",
+                        total_steps=2 * rounds, peak_lr=3e-3, end_lr=1e-6,
+                        warmup_steps=1, h_base=2, alpha=0.001, remat=False,
+                        weight_decay=0.01, sync_quantize=quantize,
+                        outer_momentum=momentum, sharding=policy)
+    w = pm.worker_count(policy, jmesh)
+    eng = RoundEngine(cfg, run_cfg, workers=w, b_loc=2, seq=16, seed=seed,
+                      data="device", layout="flat_sharded",
+                      mesh=jmesh, policy=policy)
+    lr_fn = make_lr_fn(run_cfg)
+    state = eng.init_state()
+    losses = []
+    for t, h in schedules.rounds(run_cfg, lr_fn):
+        state, m = eng.run_round(state, t, h, lr_fn)
+        losses.append(float(m["loss"]))
+    hashes = {}
+    for k in ("params", "anchor"):
+        if k in state:
+            for b, arr in state[k].items():
+                hashes.update(_shard_hashes(f"{k}/{b}", arr))
+    info = runtime_info()
+    return {
+        "mode": "engine", "ok": all(np.isfinite(losses)), "losses": losses,
+        "shard_hashes": hashes, "mesh": mesh, "policy": policy, "workers": w,
+        "quantize": quantize, "momentum": momentum, "rounds": len(losses),
+        "arch": arch, **info,
+    }
+
+
+def probe() -> dict:
+    """Cheapest possible cross-process collective: one psum over all
+    devices.  tests/test_multihost.py runs this first and skips gracefully
+    when the distributed CPU backend is unavailable."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n = len(jax.devices())
+    jmesh = jax.make_mesh((n,), ("x",))
+    host = np.arange(n, dtype=np.float32)
+    arr = jax.make_array_from_callback(
+        (n,), NamedSharding(jmesh, P("x")), lambda idx: host[idx])
+    total = float(jax.jit(jnp.sum)(arr))
+    return {"mode": "probe", "ok": total == n * (n - 1) / 2,
+            "devices": n, **runtime_info()}
+
+
+# --------------------------------------------------------------------------
+# Spawning
+# --------------------------------------------------------------------------
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def _pin_device_count(flags: str, n: int) -> str:
+    """Rewrite an XLA_FLAGS string so it pins exactly `n` simulated host
+    devices (dropping any prior pin) — used identically for spawned workers
+    and single-process runs so their meshes always agree."""
+    base = re.sub(r"--xla_force_host_platform_device_count=\d+", "", flags)
+    return (base + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def spawn_workers(num_processes: int, *, total_devices: int = 8,
+                  extra: tuple[str, ...] = (), timeout: int = 900):
+    """Launch N `python -m repro.launch.multihost` worker processes on this
+    machine (localhost coordinator, `total_devices/N` simulated CPU devices
+    each) and wait.  Returns [(returncode, stdout, stderr)] per process."""
+    assert total_devices % num_processes == 0, (total_devices, num_processes)
+    port = _free_port()
+    procs = []
+    for pid in range(num_processes):
+        env = dict(os.environ)
+        env["REPRO_COORDINATOR"] = f"localhost:{port}"
+        env["REPRO_NUM_PROCESSES"] = str(num_processes)
+        env["REPRO_PROCESS_ID"] = str(pid)
+        env["XLA_FLAGS"] = _pin_device_count(
+            env.get("XLA_FLAGS", ""), total_devices // num_processes)
+        env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.multihost", *extra],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True))
+    out = []
+    for p in procs:
+        try:
+            so, se = p.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            so, se = p.communicate()
+            se = (se or "") + "\n[spawn_workers] TIMEOUT"
+        out.append((p.returncode, so, se))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spawn", type=int, default=0,
+                    help="launch N worker processes on this machine and "
+                         "aggregate their JSON (0: run as a worker / "
+                         "single process)")
+    ap.add_argument("--total-devices", type=int, default=8,
+                    help="global device count (split across --spawn "
+                         "workers; pinned locally when single-process)")
+    ap.add_argument("--mode", default="sync",
+                    choices=["sync", "engine", "probe"])
+    ap.add_argument("--mesh", default="2x2x2",
+                    help="data x model or pod x data x model; the product "
+                         "must equal --total-devices")
+    ap.add_argument("--policy", default="fsdp", choices=["dp", "fsdp"])
+    ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--overlap", action="store_true",
+                    help="sync mode: split begin/apply across round "
+                         "boundaries (the engine's --sync overlap seam)")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arch", default="starcoder2-3b")
+    args = ap.parse_args()
+
+    if args.spawn:
+        extra = ["--mode", args.mode, "--mesh", args.mesh,
+                 "--policy", args.policy, "--momentum", str(args.momentum),
+                 "--rounds", str(args.rounds), "--seed", str(args.seed),
+                 "--arch", args.arch]
+        if args.quantize:
+            extra.append("--quantize")
+        if args.overlap:
+            extra.append("--overlap")
+        results = spawn_workers(args.spawn, total_devices=args.total_devices,
+                                extra=tuple(extra))
+        ok = all(rc == 0 for rc, _, _ in results)
+        for i, (rc, so, se) in enumerate(results):
+            print(f"--- process {i} (rc={rc}) ---")
+            print(so.strip())
+            if rc != 0:
+                print(se[-2000:], file=sys.stderr)
+        sys.exit(0 if ok else 1)
+
+    # worker (REPRO_COORDINATOR set by the spawner) or single-process run;
+    # single-process: pin the simulated device count before jax wakes up
+    if "REPRO_COORDINATOR" not in os.environ and "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = _pin_device_count(
+            os.environ.get("XLA_FLAGS", ""), args.total_devices)
+    initialize()
+    if args.mode == "probe":
+        out = probe()
+    elif args.mode == "engine":
+        out = run_engine(mesh=args.mesh, policy=args.policy,
+                         quantize=args.quantize, momentum=args.momentum,
+                         rounds=args.rounds, seed=args.seed, arch=args.arch)
+    else:
+        out = run_sync(mesh=args.mesh, policy=args.policy,
+                       quantize=args.quantize, momentum=args.momentum,
+                       overlap=args.overlap, rounds=args.rounds,
+                       seed=args.seed)
+    print(json.dumps(out))
+    sys.exit(0 if out["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

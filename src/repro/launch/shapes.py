@@ -118,29 +118,10 @@ def _abstract_flat_state(cfg, run_cfg, w: int, dtype, spec):
 
 
 def _flat_state_specs(run_cfg, waxes, spec):
-    """Shardings for the flat state.
-
-    Plain flat: the worker axis over the worker mesh axes; the flat dim
-    replicated (per-leaf inner shardings don't survive concatenation).
-    flat_sharded: the flat dim additionally splits into contiguous chunks
-    over the non-worker mesh axes — params AND optimizer moments stored at
-    1/S per device, anchors/outer momentum likewise — which is what lets
-    the fsdp policy run a flat layout at all."""
-    saxes = getattr(spec, "shard_axes", ())
-    flat_dim = (saxes[0] if len(saxes) == 1 else tuple(saxes)) if saxes \
-        else None
-    bufs = lambda lead: {b: P(*(lead + (flat_dim,))) for b in spec.buckets}
-    wlead, alead = (waxes,), ()
-    if run_cfg.optimizer == "sgd":
-        opt = {"mu": bufs(wlead), "step": P()}
-    else:
-        opt = {"m": bufs(wlead), "v": bufs(wlead), "step": P()}
-    out = {"params": bufs(wlead), "opt": opt}
-    if run_cfg.sync_quantize or run_cfg.outer_momentum > 0.0:
-        out["anchor"] = bufs(alead)
-        if run_cfg.outer_momentum > 0.0:
-            out["outer_mu"] = bufs(alead)
-    return out
+    """Shardings for the flat state — see core/flat.py flat_state_specs
+    (shared with the RoundEngine's mesh-carrying init path)."""
+    from repro.core.flat import flat_state_specs
+    return flat_state_specs(run_cfg, waxes, spec)
 
 
 def _batch_abstract(cfg, lead: tuple[int, ...], seq: int):

@@ -58,7 +58,10 @@ def compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
     run_cfg = RunConfig(sharding=policy, sync_quantize=quantize,
                         outer_momentum=momentum)
     mesh = make_debug_mesh(n_data, n_model, pods=pods)
-    out = {}
+    out = {"_config": {"arch": arch, "smoke": smoke, "quantize": quantize,
+                       "momentum": momentum, "policy": policy,
+                       "mesh": [d for d in ((pods,) if pods else ())
+                                + (n_data, n_model)]}}
     for layout in layouts:
         case = build_calib_case(cfg, "train_4k", mesh, policy=policy,
                                 run_cfg=run_cfg, fn_kind="sync",
@@ -71,18 +74,129 @@ def compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
         counts = hlo_analysis.collective_counts(hlo)
         nbytes = hlo_analysis.collective_bytes(hlo)
         legs = hlo_analysis.collective_result_bytes(hlo)
+        # classify all-reduces: the quantized sharded sync is allowed ONE
+        # tiny scale collective — the amax fold, 4 bytes per model tensor
+        # (f32 per leaf, all buckets concatenated) — and zero payload
+        # (bucket-sized) all-reduces.  Anything bigger than the fold's exact
+        # size (+ alignment slack) counts as a payload all-reduce.
+        n_leaves = case.meta["n_leaves"]
+        fold_limit = 4 * n_leaves + 64
+        ars = [op for op in hlo_analysis.collective_ops(hlo)
+               if op["kind"] == "all-reduce"]
+        fold = [op for op in ars if op["bytes_full"] <= fold_limit]
         out[layout] = {
             "collective_counts": counts,
             "collective_bytes": {k: v for k, v in nbytes.items() if v},
             "collective_leg_bytes": {k: v for k, v in legs.items() if v},
             "all_reduce_ops": counts["all-reduce"],
+            "amax_fold_ops": len(fold),
+            "amax_fold_bytes": sum(op["bytes_full"] for op in fold),
+            "payload_all_reduce_ops": len(ars) - len(fold),
             "reduce_scatter_ops": counts["reduce-scatter"],
             "all_gather_ops": counts["all-gather"],
             "bytes_on_wire": sum(v for k, v in nbytes.items() if k != "dci"),
             "scatter_leg_bytes": legs["reduce-scatter"],
-            "n_leaves": case.meta["n_leaves"],
+            "rs_wire_bytes": nbytes["reduce-scatter"],
+            "ag_wire_bytes": nbytes["all-gather"],
+            "n_leaves": n_leaves,
             "n_buckets": case.meta["n_buckets"],
         }
+    return out
+
+
+def exec_compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
+                 quantize: bool = False, momentum: float = 0.0,
+                 n_data: int = 4, n_model: int = 2, pods: int = 0,
+                 policy: str = "dp", rounds: int = 3,
+                 layouts: tuple[str, ...] = LAYOUTS) -> dict:
+    """EXECUTE the sync under each layout on the debug mesh and compare the
+    multi-round trajectories against the mesh-less flat path (the reference
+    every bitwise test in tests/ anchors to).
+
+    Each round perturbs every worker's params with the same host-generated
+    noise and runs the layout's jitted sync.  Quantized, all layouts must
+    agree BITWISE with the reference on any mesh: the worker mean runs over
+    integer codes (core/sync.py RS-domain rule), so neither GSPMD's
+    all-reduce ordering nor the explicit reduce_scatter changes a single
+    bit.  Unquantized f32 means are only order-independent for 2 workers.
+    """
+    import numpy as np
+
+    from repro.configs import registry as R
+    from repro.core import flat as F, local_update as LU
+    from repro.core.sync import make_sync
+    from repro.models import api, param as pm
+
+    cfg = R.get_smoke_config(arch) if smoke else R.get_config(arch)
+    run_cfg = RunConfig(sharding=policy, sync_quantize=quantize,
+                        outer_momentum=momentum)
+    mesh = make_debug_mesh(n_data, n_model, pods=pods)
+    w = pm.worker_count(policy, mesh)
+    waxes = pm.worker_mesh_axes(policy, mesh)
+    saxes = tuple(a for a in mesh.axis_names if a not in waxes)
+    sizes = pm.mesh_axis_sizes(mesh)
+    shards = int(np.prod([sizes[a] for a in waxes + saxes]))
+
+    params = pm.init_params(api.get_module(cfg).param_defs(cfg),
+                            jax.random.PRNGKey(0))
+    base = LU.init_state(cfg, run_cfg, params, w)
+    base.pop("opt")          # the sync never touches optimizer state
+
+    # per-round worker perturbations, shared by every layout (host numpy)
+    rng = np.random.RandomState(7)
+    noises = [jax.tree.map(lambda x: (rng.randn(w, *np.shape(x)) * 0.01
+                                      ).astype(np.float32), params)
+              for _ in range(rounds)]
+
+    def run_layout(layout, with_mesh: bool):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if layout == "tree":
+            spec = None
+        elif layout == "flat":
+            spec = F.FlatParamSpace(params)
+        else:
+            spec = (F.ShardedFlatSpace(params, shards, mesh=mesh,
+                                       worker_axes=waxes, shard_axes=saxes)
+                    if with_mesh else F.ShardedFlatSpace(params, shards))
+        if spec is None:
+            state = dict(base)
+        else:
+            state = {k: (spec.flatten(v, lead=1) if k == "params"
+                         else spec.flatten(v)) for k, v in base.items()}
+        if with_mesh and spec is not None:
+            sspec = F.flat_state_specs(run_cfg, waxes, spec)
+            state = {k: {b: jax.device_put(v[b],
+                                           NamedSharding(mesh, sspec[k][b]))
+                         for b in v} for k, v in state.items()}
+        sync = jax.jit(make_sync(run_cfg, spec=spec))
+        for noise in noises:
+            if spec is None:
+                perturbed = jax.tree.map(
+                    lambda p, n: (p + n.astype(p.dtype)), state["params"],
+                    noise)
+            else:
+                nb = spec.flatten(noise, lead=1)
+                perturbed = {b: state["params"][b] + nb[b].astype(
+                    state["params"][b].dtype) for b in nb}
+            state = dict(state, params=perturbed)
+            with mesh:
+                state = sync(state)
+        if spec is None:
+            return state
+        return {k: (spec.unflatten(v, lead=1) if k == "params"
+                    else spec.unflatten(v)) for k, v in state.items()}
+
+    ref = run_layout("flat_sharded", with_mesh=False)   # host path reference
+    out = {"rounds": rounds, "workers": w, "quantize": quantize,
+           "momentum": momentum, "reference": "flat_sharded(no mesh)"}
+    for layout in layouts:
+        got = run_layout(layout, with_mesh=True)
+        diffs = [float(np.max(np.abs(np.asarray(a, np.float32)
+                                     - np.asarray(b, np.float32))))
+                 if np.size(np.asarray(a)) else 0.0
+                 for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref))]
+        md = max(diffs)
+        out[layout] = {"max_abs_diff": md, "bitwise": md == 0.0}
     return out
 
 
@@ -94,23 +208,42 @@ def main() -> None:
     ap.add_argument("--quantize", action="store_true")
     ap.add_argument("--momentum", type=float, default=0.0)
     ap.add_argument("--policy", default="dp", choices=["dp", "fsdp"])
-    ap.add_argument("--param-layout", default=None, choices=list(LAYOUTS),
-                    help="compare only this layout (default: all three)")
+    ap.add_argument("--param-layout", default=None,
+                    help="compare only these layouts, comma-separated "
+                         "(default: all three)")
     ap.add_argument("--mesh", default="4x2",
                     help="debug mesh data x model, or pod x data x model; "
                          "8x1 = pure dp, where tree/flat move identical "
                          "bytes and flat_sharded's scatter leg lands 1/W "
                          "per device (with model sharding, tree all-reduces "
                          "shard-local bytes)")
+    ap.add_argument("--exec", dest="exec_", action="store_true",
+                    help="also EXECUTE the sync per layout on the mesh and "
+                         "compare multi-round trajectories against the "
+                         "mesh-less flat path (bitwise when --quantize: "
+                         "the integer-code mean is order-independent)")
+    ap.add_argument("--exec-rounds", type=int, default=3)
     args = ap.parse_args()
     dims = [int(x) for x in args.mesh.split("x")]
     pods, n_data, n_model = ([0] + dims if len(dims) == 2 else dims)
-    layouts = (args.param_layout,) if args.param_layout else LAYOUTS
-    print(json.dumps(compare(args.arch, smoke=not args.full,
-                             quantize=args.quantize,
-                             momentum=args.momentum,
-                             n_data=n_data, n_model=n_model, pods=pods,
-                             policy=args.policy, layouts=layouts)))
+    if args.param_layout:
+        layouts = tuple(args.param_layout.split(","))
+        assert all(l in LAYOUTS for l in layouts), layouts
+    else:
+        layouts = LAYOUTS
+    out = compare(args.arch, smoke=not args.full,
+                  quantize=args.quantize,
+                  momentum=args.momentum,
+                  n_data=n_data, n_model=n_model, pods=pods,
+                  policy=args.policy, layouts=layouts)
+    if args.exec_:
+        out["exec"] = exec_compare(args.arch, smoke=not args.full,
+                                   quantize=args.quantize,
+                                   momentum=args.momentum,
+                                   n_data=n_data, n_model=n_model, pods=pods,
+                                   policy=args.policy,
+                                   rounds=args.exec_rounds, layouts=layouts)
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -103,7 +103,9 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
 
 def main():
     from repro.launch import multihost
-    multihost.initialize()  # no-op unless REPRO_COORDINATOR is set
+    distributed = multihost.initialize()  # no-op without REPRO_COORDINATOR
+    if distributed:
+        print(f"multihost: {multihost.runtime_info()}")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="starcoder2-3b")
     ap.add_argument("--smoke", action="store_true",
@@ -137,6 +139,18 @@ def main():
     ap.add_argument("--overlap-depth", type=int, default=0,
                     help="local steps the next round runs on stale params "
                          "before the deferred sync applies (--sync overlap)")
+    ap.add_argument("--mesh", default=None,
+                    help="run the rounds on a device mesh, e.g. 4x2 (data x "
+                         "model) or 2x2x2 (pod x data x model): requires "
+                         "--param-layout flat_sharded; the sync then "
+                         "executes its explicit reduce_scatter/all_gather "
+                         "collectives — across processes when launched "
+                         "under jax.distributed (launch/multihost.py).  "
+                         "--workers must equal the policy's worker count "
+                         "on the mesh")
+    ap.add_argument("--policy", default="dp", choices=["dp", "fsdp"],
+                    help="sharding policy naming the mesh's worker axes "
+                         "(dp: every data rank; fsdp: one worker per pod)")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--workers", type=int, default=4)
@@ -151,14 +165,20 @@ def main():
     from repro.configs import registry as R
     cfg = R.get_smoke_config(args.arch) if args.smoke else R.get_config(args.arch)
     run_cfg = RunConfig(
-        schedule=args.schedule, optimizer=args.optimizer,
+        schedule=args.schedule, optimizer=args.optimizer, sharding=args.policy,
         total_steps=args.steps, peak_lr=args.peak_lr, alpha=args.alpha,
         h_base=args.h_base, warmup_steps=max(args.steps // 20, 1),
         remat=False)
+    mesh = None
+    if args.mesh:
+        import jax
+        dims, axes = multihost._parse_mesh(args.mesh)
+        mesh = jax.make_mesh(dims, axes)
     eng = RoundEngine(cfg, run_cfg, workers=args.workers, b_loc=args.batch,
                       seq=args.seq, mode=args.engine, data=args.data,
                       layout=args.param_layout, sync=args.sync,
-                      overlap_depth=args.overlap_depth)
+                      overlap_depth=args.overlap_depth,
+                      mesh=mesh, policy=args.policy)
     state, hist = train(cfg, run_cfg, workers=args.workers, b_loc=args.batch,
                         seq=args.seq, ckpt_dir=args.ckpt, engine=args.engine,
                         data=args.data, layout=args.param_layout,

@@ -5,3 +5,13 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Hypothesis suites run with the deadline disabled everywhere (CI machines
+# jit-compile inside test bodies; wall-clock deadlines only add flakes).
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("repro", deadline=None)
+    _hyp_settings.load_profile("repro")
+except ImportError:
+    pass

@@ -199,6 +199,36 @@ def test_sync_flat_update_matches_oracle(w, n, dtype, quantize, momentum):
                                    rtol=TOL[dtype], atol=TOL[dtype])
 
 
+@pytest.mark.parametrize("n", [300, 70_000])
+@pytest.mark.parametrize("quantize,momentum", [(False, 0.0), (True, 0.0),
+                                               (False, 0.9), (True, 0.9)])
+def test_sync_apply_update_matches_oracle(n, quantize, momentum):
+    """The gather-leg kernel (dequant + Nesterov + anchor in one pass) vs
+    its jnp oracle — the fused half `--sync overlap` defers."""
+    from functools import partial
+
+    from repro.kernels import ref
+    from repro.kernels.sync_update import sync_apply_update
+
+    rng = np.random.RandomState(n)
+    step_in = (jnp.asarray(rng.randint(-127, 128, n), jnp.float32) / 2
+               if quantize else jnp.asarray(rng.randn(n), jnp.float32))
+    anchor = jnp.asarray(rng.randn(n), jnp.float32)
+    scale = (jnp.asarray(np.abs(rng.randn(n)) + 0.1, jnp.float32)
+             if quantize else None)
+    mu = jnp.asarray(rng.randn(n), jnp.float32) if momentum else None
+    got = sync_apply_update(step_in, anchor, scale=scale, mu=mu,
+                            momentum=momentum, interpret=True)
+    want = jax.jit(partial(ref.sync_apply_update, momentum=momentum))(
+        step_in, anchor, scale=scale, mu=mu)
+    for g, w_ in zip(got, want):
+        if w_ is None:
+            assert g is None
+            continue
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_),
+                                   rtol=2e-5, atol=2e-5)
+
+
 # ------------------------------------------------ flat == tree (bitwise) --
 
 def _bitwise_case(schedule, optimizer, quantize, momentum, steps=8):

@@ -1,0 +1,147 @@
+"""Property tests for the quantized-sync math (core/sync.py).
+
+Three families of invariants:
+  * `_quantize_delta` round trip: elementwise error at most half an int8
+    quantization level (amax/254), all-zero deltas reconstruct EXACTLY
+    (the guarded scale), and tiny deltas keep per-tensor precision;
+  * the RS-domain scale rule: shard-local partial per-tensor amaxes
+    (`partial_segment_amax`) folded with an elementwise max equal the
+    full-tensor scales bitwise, for ARBITRARY contiguous shard splits —
+    this is what lets the sharded sync compute scales with one tiny pmax
+    instead of GSPMD per-element scale collectives;
+  * integer-code means are order-independent: Σq over workers is exact in
+    f32 under any summation order/chunking, and `wire_dtype(W)` always
+    holds the sum — the foundation of every cross-layout / cross-process
+    bitwise claim in tests/test_sharded.py and tests/test_multihost.py.
+
+Requires hypothesis (skips as a module otherwise); the deadline is disabled
+globally via the conftest profile.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import flat as F  # noqa: E402
+from repro.core.sync import (_guarded_scale, _quantize_delta,  # noqa: E402
+                             partial_segment_amax, wire_dtype)
+
+_seed = st.integers(0, 2 ** 31 - 1)
+
+
+# -------------------------------------------------------- round trip ------
+
+@given(seed=_seed, n=st.integers(1, 300),
+       log_scale=st.integers(-40, 20), zero_frac=st.floats(0.0, 1.0))
+@settings(max_examples=60)
+def test_roundtrip_error_at_most_half_a_level(seed, n, log_scale, zero_frac):
+    """|dequant(quant(d)) - d| <= amax/254 elementwise — half the int8 grid
+    step amax/127 — at every magnitude from subnormal-adjacent to huge."""
+    rng = np.random.RandomState(seed)
+    d = rng.randn(n).astype(np.float32) * np.float32(10.0 ** log_scale)
+    d[rng.rand(n) < zero_frac] = 0.0
+    dq = np.asarray(_quantize_delta({"x": jnp.asarray(d)})["x"])
+    amax = float(np.max(np.abs(d)))
+    if amax == 0.0:
+        np.testing.assert_array_equal(dq, np.zeros_like(d))
+    else:
+        # the additive term covers f32-subnormal territory: for amax below
+        # ~2e-43 the scale amax/127 itself rounds at the subnormal ulp
+        # (~1.4e-45), and the dequant q * s' inherits up to 127 half-ulps
+        err = np.abs(dq - d).max()
+        assert err <= amax / 254 * (1 + 1e-6) + 127 * 1.5e-45, (err, amax)
+
+
+@given(seed=_seed, n=st.integers(1, 100))
+@settings(max_examples=30)
+def test_all_zero_delta_reconstructs_exactly(seed, n):
+    dq = np.asarray(_quantize_delta({"x": jnp.zeros(n, jnp.float32)})["x"])
+    np.testing.assert_array_equal(dq, np.zeros(n, np.float32))
+    # and the guard keeps the scale finite (1.0), not a denormal ratio
+    assert float(_guarded_scale(jnp.float32(0.0))) == 1.0
+
+
+@given(seed=_seed, amax_exp=st.integers(-44, -20))
+@settings(max_examples=30)
+def test_tiny_delta_keeps_per_tensor_precision(seed, amax_exp):
+    """Regression family for the old `amax + 1e-12` guard, which dilated the
+    grid of any tensor whose range sat below ~1e-12."""
+    rng = np.random.RandomState(seed)
+    amax = np.float32(2.0 ** amax_exp)
+    d = (rng.uniform(-1, 1, 64).astype(np.float32) * amax)
+    dq = np.asarray(_quantize_delta({"x": jnp.asarray(d)})["x"])
+    a = float(np.max(np.abs(d)))
+    assert np.abs(dq - d).max() <= a / 254 * (1 + 1e-6) + 127 * 1.5e-45
+
+
+# ------------------------------------------- RS-domain scale rule ---------
+
+_shapes = st.lists(st.lists(st.integers(1, 6), min_size=0, max_size=3)
+                   .map(tuple), min_size=1, max_size=6)
+
+
+@given(shapes=_shapes, shards=st.integers(1, 16), w=st.integers(1, 5),
+       n_chunks=st.integers(1, 11), seed=_seed)
+@settings(max_examples=40)
+def test_partial_amax_folds_to_full_tensor_scales(shapes, shards, w,
+                                                  n_chunks, seed):
+    """Shard-local partial per-tensor amaxes, folded by max, equal the
+    full-buffer segment_max bitwise for ARBITRARY contiguous splits — the
+    correctness of computing int8 scales in the reduce-scatter domain."""
+    rng = np.random.RandomState(seed)
+    tree = {f"p{i}": jnp.asarray(
+        (rng.randn(*shp) * 10.0 ** rng.randint(-30, 10)).astype(np.float32))
+        for i, shp in enumerate(shapes)}
+    spec = F.ShardedFlatSpace(tree, shards)
+    bucket = "float32"
+    n = spec.buffer_size(bucket)
+    nseg = spec.bucket_leaves(bucket)
+    seg = jnp.asarray(spec.segment_ids(bucket))
+    d = jnp.asarray(rng.randn(w, n).astype(np.float32))
+    # pad region must carry zero delta (as the runtime guarantees)
+    if spec.pad[bucket]:
+        d = d.at[:, -spec.pad[bucket]:].set(0.0)
+
+    full = np.asarray(partial_segment_amax(d, seg, nseg))
+
+    # arbitrary contiguous chunking of the flat dim
+    cuts = sorted(set(rng.randint(0, n + 1, size=n_chunks - 1)))
+    bounds = [0] + cuts + [n]
+    partials = [np.asarray(partial_segment_amax(
+        d[:, lo:hi], seg[lo:hi], nseg)) for lo, hi in zip(bounds, bounds[1:])
+        if hi > lo]
+    fold = np.maximum.reduce(partials)
+    np.testing.assert_array_equal(fold, full)
+    # and the guarded scales agree too
+    np.testing.assert_array_equal(np.asarray(_guarded_scale(jnp.asarray(fold))),
+                                  np.asarray(_guarded_scale(jnp.asarray(full))))
+
+
+# --------------------------------------- integer-code mean exactness ------
+
+@given(w=st.integers(1, 258), n=st.integers(1, 64), seed=_seed)
+@settings(max_examples=40)
+def test_integer_code_mean_is_order_independent(w, n, seed):
+    """Σ_i q_i with q ∈ [-127, 127] is exact in f32 whatever the summation
+    order (|Σ| <= 258*127 << 2^24), and wire_dtype(W) holds it exactly —
+    so jnp.mean of codes == reduce_scatter of codes == gloo psum of codes."""
+    rng = np.random.RandomState(seed)
+    q = rng.randint(-127, 128, size=(w, n))
+    exact = q.sum(axis=0)  # int64
+    fwd = np.zeros(n, np.float32)
+    rev = np.zeros(n, np.float32)
+    for i in range(w):
+        fwd += q[i].astype(np.float32)
+        rev += q[w - 1 - i].astype(np.float32)
+    jx = np.asarray(jnp.sum(jnp.asarray(q, jnp.float32), axis=0))
+    np.testing.assert_array_equal(fwd, exact.astype(np.float32))
+    np.testing.assert_array_equal(rev, exact.astype(np.float32))
+    np.testing.assert_array_equal(jx, exact.astype(np.float32))
+    wdt = np.dtype(wire_dtype(w))
+    info = np.iinfo(wdt)
+    assert info.min <= exact.min() and exact.max() <= info.max
+    np.testing.assert_array_equal(q.astype(wdt).sum(axis=0, dtype=wdt),
+                                  exact.astype(wdt))

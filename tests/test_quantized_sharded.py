@@ -1,0 +1,105 @@
+"""Quantized sync on the sharded layout — the RS-domain acceptance proofs.
+
+The contract under test (subprocess `launch/sync_compare`, sharded host
+mesh):
+  * LOWERING: a quantized flat_sharded sync compiles to exactly one
+    reduce_scatter + one all_gather per dtype bucket — carrying the integer
+    codes at half the f32 wire bytes — plus at most ONE scalar-sized amax
+    fold (4 bytes per model tensor); zero payload (bucket-sized)
+    all-reduces, zero GSPMD per-element scale collectives.  On both the dp
+    mesh and the fsdp pod-worker mesh, with and without outer momentum.
+  * EXECUTION: the quantized trajectories of all three layouts, executed on
+    the mesh for multiple perturb+sync rounds, are BITWISE equal to the
+    mesh-less flat reference — the integer-code mean is order-independent,
+    so no collective schedule can flip a bit (core/sync.py).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _sync_compare(*extra):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.sync_compare",
+         "--arch", "starcoder2-3b", *extra],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout)
+
+
+def _assert_rs_domain(sh):
+    """The collective budget of one quantized sharded sync."""
+    assert sh["payload_all_reduce_ops"] == 0, sh["collective_counts"]
+    assert sh["amax_fold_ops"] <= 1
+    assert sh["reduce_scatter_ops"] == sh["n_buckets"]
+    assert sh["all_gather_ops"] == sh["n_buckets"]
+    # nothing else on the wire: RS + AG per bucket + the fold, full stop
+    assert sum(sh["collective_counts"].values()) == \
+        2 * sh["n_buckets"] + sh["amax_fold_ops"]
+    # the fold is scalar-sized: one f32 per model tensor
+    assert sh["amax_fold_bytes"] <= 4 * sh["n_leaves"] + 64
+
+
+def test_quantized_sharded_rs_domain_lowering_and_exec_dp():
+    """Acceptance (dp 4x2 mesh): RS+AG with integer payloads + one amax
+    psum, and bitwise execution equality of quantized sharded vs quantized
+    flat (and tree)."""
+    rec = _sync_compare("--mesh", "4x2", "--quantize", "--exec")
+    sh, fl = rec["flat_sharded"], rec["flat"]
+    _assert_rs_domain(sh)
+    # integer wire: the RS/AG legs carry int16 codes — exactly half the f32
+    # bytes the unquantized sharded sync moves on the same mesh
+    plain = _sync_compare("--mesh", "4x2",
+                          "--param-layout", "flat_sharded")["flat_sharded"]
+    assert sh["rs_wire_bytes"] * 2 == plain["rs_wire_bytes"]
+    assert sh["ag_wire_bytes"] * 2 == plain["ag_wire_bytes"]
+    assert sh["rs_wire_bytes"] == sh["ag_wire_bytes"]
+    # total quantized-sharded wire is well under half the flat quantized sync
+    wire = sh["rs_wire_bytes"] + sh["ag_wire_bytes"] + sh["amax_fold_bytes"]
+    assert wire * 2 <= fl["bytes_on_wire"]
+    # the flat quantized sync, by contrast, pays bucket-sized all-reduces
+    # (payload + the GSPMD scale max) — the cost the RS domain removes
+    assert fl["payload_all_reduce_ops"] >= fl["n_buckets"]
+    # EXECUTION: bitwise across layouts (the integer-code mean)
+    ex = rec["exec"]
+    assert ex["quantize"] is True
+    for layout in ("tree", "flat", "flat_sharded"):
+        assert ex[layout]["bitwise"], (layout, ex[layout])
+
+
+def test_quantized_sharded_rs_domain_fsdp_pod_mesh():
+    """Acceptance (fsdp 2x2x2 pod-worker mesh): same collective budget and
+    bitwise execution with pods as workers and buckets chunked over
+    (data, model)."""
+    rec = _sync_compare("--mesh", "2x2x2", "--policy", "fsdp",
+                        "--quantize", "--exec",
+                        "--param-layout", "flat_sharded")
+    sh = rec["flat_sharded"]
+    _assert_rs_domain(sh)
+    assert sh["scatter_leg_bytes"] > 0
+    assert rec["exec"]["flat_sharded"]["bitwise"], rec["exec"]
+
+
+def test_quantized_sharded_with_momentum_keeps_budget():
+    """Outer Nesterov rides the apply leg elementwise: the collective
+    budget must not grow."""
+    rec = _sync_compare("--mesh", "4x2", "--quantize", "--momentum", "0.9",
+                        "--param-layout", "flat_sharded")
+    _assert_rs_domain(rec["flat_sharded"])
+
+
+def test_unquantized_sharded_budget_unchanged():
+    """Regression: the plain sharded sync still lowers to exactly one f32
+    reduce_scatter + one all_gather per bucket, no fold, no all-reduce."""
+    rec = _sync_compare("--mesh", "4x2", "--param-layout", "flat_sharded")
+    sh = rec["flat_sharded"]
+    assert sh["all_reduce_ops"] == 0 and sh["amax_fold_ops"] == 0
+    assert sh["reduce_scatter_ops"] == sh["n_buckets"]
+    assert sh["all_gather_ops"] == sh["n_buckets"]
+    assert sum(sh["collective_counts"].values()) == 2 * sh["n_buckets"]

@@ -157,7 +157,10 @@ def test_flat_sharded_run_bitwise_matches_tree(schedule, optimizer,
 @pytest.mark.parametrize("layout,quantize,momentum", [
     ("tree", False, 0.0),
     ("tree", True, 0.9),
+    ("flat", True, 0.0),            # overlap x quantize on the flat layout:
+    ("flat", True, 0.9),            # begin/apply split vs the fused kernel
     ("flat_sharded", False, 0.0),
+    ("flat_sharded", True, 0.0),
     ("flat_sharded", True, 0.9),
 ])
 def test_overlap_depth0_bitwise_matches_blocking(layout, quantize, momentum):
@@ -206,6 +209,36 @@ def test_overlap_depth_keeps_local_progress():
         b = np.asarray(b, np.float32)
         assert np.isfinite(b).all()
         # one stale step on a smoke model: a small, bounded perturbation
+        assert np.abs(a - b).max() < 5e-2
+
+
+@pytest.mark.parametrize("layout,momentum", [
+    ("flat", 0.0), ("flat_sharded", 0.0), ("flat_sharded", 0.9),
+])
+def test_overlap_depth_quantized_correction_form(layout, momentum):
+    """overlap x quantize at depth > 0 (the previously-untested interaction):
+    the correction form runs on quantized pending syncs — the deferred
+    gather dequantizes the code-sums while workers are d steps ahead — and
+    stays finite and close to the blocking quantized trajectory; flush()
+    clears the in-flight reduce."""
+    kw = {"shards": SHARDS} if layout == "flat_sharded" else {}
+    mk, trace, lr_fn = _engines("qsr", "adamw", True, momentum)
+    eb = mk(layout=layout, **kw)
+    eo = mk(layout=layout, sync="overlap", overlap_depth=1, **kw)
+    sb, so = eb.init_state(), eo.init_state()
+    for t, h in trace:
+        sb, _ = eb.run_round(sb, t, h, lr_fn)
+        so, _ = eo.run_round(so, t, h, lr_fn)
+    assert eo._pending is not None
+    # pending carries the quantized reduce: codes + per-element scales
+    assert set(eo._pending) == {"q", "scale"}
+    so = eo.flush(so)
+    assert eo._pending is None
+    for a, b in zip(jax.tree.leaves(sb["params"]),
+                    jax.tree.leaves(so["params"])):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        assert np.isfinite(b).all()
         assert np.abs(a - b).max() < 5e-2
 
 
