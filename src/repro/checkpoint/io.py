@@ -40,17 +40,29 @@ def _decode(obj):
     return obj
 
 
+def stage(tree: Any) -> Any:
+    """Device pytree -> host (numpy) pytree, one `jax.device_get` batch.
+
+    The transfer point of the async observer pipeline (core/observer.py):
+    the round loop submits device arrays and the worker thread stages them
+    here, so neither the transfer nor the serialization below ever blocks
+    training.  Passing already-host values through is a no-op copy."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return jax.tree.unflatten(treedef, jax.device_get(leaves))
+
+
 def save(path: str, tree: Any, *, step: int | None = None,
          extra: dict | None = None) -> None:
     """`extra` is free-form msgpack-serializable run metadata (e.g. the
     RoundEngine's H-trace) stored alongside the state."""
     os.makedirs(path, exist_ok=True)
     leaves, treedef = jax.tree.flatten(tree)
+    leaves = jax.device_get(leaves)   # one batch, no-op for host arrays
     payload = {
         "treedef": str(treedef),
         "step": step,
         "extra": extra or {},
-        "leaves": [_encode(jax.device_get(x)) for x in leaves],
+        "leaves": [_encode(x) for x in leaves],
     }
     tmp = os.path.join(path, "state.msgpack.tmp")
     with open(tmp, "wb") as f:

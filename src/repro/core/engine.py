@@ -97,6 +97,13 @@ from repro.models import api, common as cm, param as pm
 Pytree = Any
 
 
+class PendingSyncError(RuntimeError):
+    """An overlap-mode sync is still in flight where a synced state is
+    required.  A real exception, not a bare `assert`: checkpoint/readout
+    paths run under `python -O`, which strips asserts — a stripped guard
+    would silently hand out (or persist) pre-consensus params."""
+
+
 # --------------------------------------------------------------------------
 # Bucketing
 # --------------------------------------------------------------------------
@@ -339,7 +346,14 @@ class RoundEngine:
             "overlap" (reduce at the boundary, gather/apply deferred past
             the next round's first `overlap_depth` steps; bucketed mode
             only; depth 0 is bitwise the blocking trajectory — see the
-            module docstring.  `flush()` applies the last in-flight sync.)
+            module docstring.  `flush()` applies the last in-flight sync.
+            Composes with `mesh=`: the pending reduce is threaded through
+            the jitted round programs, its worker-sharded payload living
+            on the mesh's devices — across real `jax.distributed`
+            processes — between rounds (launch/multihost.py --mode engine
+            --sync overlap).  Observers read `synced_view()`; checkpoints
+            use `save(flush_pending=True)` or `flush()` — `save` raises
+            PendingSyncError rather than persist pre-consensus params.)
     shards: chunk count for layout="flat_sharded" (0 -> workers, or the
             full device count when a mesh is given).
     mesh:   optional jax Mesh (layout="flat_sharded" only): the spec then
@@ -469,9 +483,10 @@ class RoundEngine:
     def params_single(self, state: Pytree) -> Pytree:
         """Worker-0 params as the model pytree, whatever the layout — the
         post-run handoff to eval/serving code."""
-        assert self._pending is None, \
-            "in-flight sync: pass flush(state) or synced_view(state), not " \
-            "the raw run state"
+        if self._pending is not None:
+            raise PendingSyncError(
+                "in-flight sync: pass flush(state) or synced_view(state), "
+                "not the raw run state")
         params = state["params"]
         if self.layout != "tree":
             params = self._ensure_spec().unflatten(params, lead=1)
@@ -516,7 +531,13 @@ class RoundEngine:
         {"loss", "grad_norm", "divergence"} computed in-graph.
         """
         hp = bucket_pow2(h) if self.mode == "bucketed" else h
-        lrs = jnp.asarray([lr_fn(t + i) for i in range(hp)], jnp.float32)
+        # the schedule is only defined on [0, total_steps): query it for the
+        # h valid steps and fill the hp - h padded lanes with the last valid
+        # value.  Masked steps never apply an lr, but a decay schedule
+        # queried past its domain can return negative/NaN values (or raise)
+        # — the truncated final round must not poison the padded lanes
+        lr_valid = [lr_fn(t + i) for i in range(h)]
+        lrs = jnp.asarray(lr_valid + [lr_valid[-1]] * (hp - h), jnp.float32)
         fn = self._program(hp, self._pending is not None)
         args = []
         if self._synth is None:
@@ -564,25 +585,54 @@ class RoundEngine:
 
     # -- checkpointing ----------------------------------------------------
 
-    def save(self, path: str, state: Pytree, *, step: int) -> None:
+    def checkpoint_extra(self) -> dict:
+        """The engine-side checkpoint metadata: the H-trace (resume lands on
+        a round boundary) + the param-layout record for cross-layout
+        restore.  Exposed so async observers (core/observer.py) can capture
+        it on the round loop's thread at snapshot time — the trace keeps
+        advancing while the background writer runs."""
+        spec = self._ensure_spec() if self.layout != "tree" else None
+        return {"h_trace": [[t, h] for t, h in self.h_trace],
+                **ckpt_io.layout_meta(self.layout, spec)}
+
+    def save(self, path: str, state: Pytree, *, step: int,
+             flush_pending: bool = False) -> None:
         """Checkpoint state + the engine's step / H-trace so a resumed run
         lands exactly on the next round boundary.  Flat layouts checkpoint
         the buffers directly — one entry per dtype bucket, not per tensor —
         with the layout recorded in the meta side file for cross-layout
-        restore (checkpoint/io.py)."""
-        assert self._pending is None, \
-            "flush() the in-flight sync before checkpointing"
-        spec = self._ensure_spec() if self.layout != "tree" else None
-        ckpt_io.save(path, state, step=step,
-                     extra={"h_trace": [[t, h] for t, h in self.h_trace],
-                            **ckpt_io.layout_meta(self.layout, spec)})
+        restore (checkpoint/io.py).
+
+        Overlap mode: a checkpoint written mid-overlap must never hold
+        pre-consensus params.  With a sync in flight this raises
+        PendingSyncError (a real error, not a stripped-under-`python -O`
+        assert) unless `flush_pending=True`, which writes the *synced view*
+        of `state` — the consensus a blocking round would have produced —
+        WITHOUT consuming the in-flight pipeline, so the training stream
+        continues overlapped.  `flush()` + save remains the forced-sync
+        alternative."""
+        if self._pending is not None:
+            if not flush_pending:
+                raise PendingSyncError(
+                    "overlap sync in flight: save(flush_pending=True) "
+                    "writes the synced consensus without disturbing the "
+                    "pipeline, or flush() first for a forced sync point")
+            state = self.synced_view(state)
+        ckpt_io.save(path, state, step=step, extra=self.checkpoint_extra())
 
     def restore(self, path: str, like_state: Pytree) -> tuple[Pytree, int]:
         """Restore into this engine's layout.  A checkpoint written under
         any other param layout (tree <-> flat <-> flat_sharded, or a
         different shard count) is converted on the way in through the tree
         layout as the common currency — flatten/unflatten are exact, so
-        resuming across layouts stays bitwise-faithful."""
+        resuming across layouts stays bitwise-faithful.
+
+        Refuses a live in-flight sync: restoring over it would silently
+        orphan a round's reduce — flush() (or discard the run) first."""
+        if self._pending is not None:
+            raise PendingSyncError(
+                "restore() with an overlap sync in flight would orphan the "
+                "pending reduce: flush() the current state first")
         _, meta = ckpt_io.read_meta(path)
         ck_layout = meta.get("layout", "tree")
         ck_shards = meta.get("shards")
@@ -614,13 +664,13 @@ class RoundEngine:
                 state = flat.to_tree_state(ck_spec, state)
             if self.layout != "tree":
                 state = flat.to_flat_state(self._ensure_spec(), state)
-        self._pending = None
         trace = [(int(t), int(h)) for t, h in extra.get("h_trace", [])]
         step = int(step or 0)
         if trace:
             done = trace[-1][0] + trace[-1][1]
-            assert done == step, (
-                f"checkpoint step {step} is not the round boundary implied by "
-                f"its H-trace (ends at {done})")
+            if done != step:     # real error: survives `python -O`
+                raise ValueError(
+                    f"checkpoint step {step} is not the round boundary "
+                    f"implied by its H-trace (ends at {done})")
         self.h_trace = trace
         return state, step

@@ -1,0 +1,153 @@
+r"""AsyncObserver: eval/checkpoint off the round loop's critical path.
+
+QSR's payoff is wall-clock — communication hidden behind local steps — yet a
+round loop that stops to `jax.device_get` a state snapshot, run eval, and
+write a checkpoint re-serializes exactly the latency the overlapped sync
+removes.  This module is the other half of `--sync overlap`: observers run
+on a background host thread, fed by `RoundEngine.synced_view(state)` (the
+pure consensus view — the in-flight pipeline is untouched), so the training
+stream never blocks on host I/O.
+
+## The pipeline
+
+    round loop:  [ steps | RS ]  [ steps | AG·apply ... RS ]  [ steps | ...
+                        \ synced_view (pure, async dispatch)
+    observer:            [ device_get | eval | ckpt write ]      host thread
+
+`submit(step, snapshot)` is O(1) on the round loop's thread: it hands the
+*device* arrays over and returns — the expensive `jax.device_get`
+(checkpoint/io.py `stage`) and whatever the handler does (eval metrics,
+`ckpt_io.save`) happen on the worker.  Because XLA dispatch is async, the
+snapshot's computation itself (the deferred gather/apply of `synced_view`)
+also overlaps the next round's compute; the worker's device_get is the
+first point anything blocks on it.
+
+## Double buffering
+
+At most one snapshot is in flight (being processed) and one queued.  A
+submit that finds the queue slot full REPLACES the queued snapshot
+(latest-wins) instead of blocking: the training stream never waits for a
+slow observer, and the `dropped` counter records how many intermediate
+snapshots were superseded — an observer that cannot keep up sees every
+*latest* state, not every state.  `drain()` blocks until everything
+submitted has been handled (end of run, or a forced sync point); handler
+exceptions are re-raised there and by `close()`, never swallowed.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+
+class AsyncObserver:
+    """Background worker for eval/checkpoint observers (double-buffered).
+
+    handler(step, snapshot) runs on the worker thread; `snapshot` is
+    whatever was submitted — typically a host pytree staged from
+    `engine.synced_view(state)` via `checkpoint.io.stage` (the default
+    `stage=` hook), so device transfer cost lands on the worker too.
+    """
+
+    def __init__(self, handler: Callable[[int, Any], None], *,
+                 stage: Callable[[Any], Any] | None = None,
+                 merge: Callable[[Any, Any], Any] | None = None):
+        from repro.checkpoint import io as ckpt_io
+        self._handler = handler
+        self._stage = ckpt_io.stage if stage is None else stage
+        self._merge = merge
+        self._cv = threading.Condition()
+        self._queued: tuple[int, Any] | None = None
+        self._busy = False
+        self._closed = False
+        self._error: BaseException | None = None
+        self.submitted = 0
+        self.processed = 0
+        self.dropped = 0
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="repro-observer")
+        self._thread.start()
+
+    # -- round-loop side ---------------------------------------------------
+
+    def submit(self, step: int, snapshot: Any) -> None:
+        """Hand a (device) snapshot to the worker and return immediately.
+        Never blocks on observer work: if the previous snapshot is still
+        queued it is superseded (latest-wins; the optional `merge` hook can
+        fold must-not-drop flags of the superseded snapshot — e.g. a
+        pending checkpoint request — into the newer one)."""
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("observer is closed")
+            self._reraise()
+            if self._queued is not None:
+                self.dropped += 1
+                if self._merge is not None:
+                    snapshot = self._merge(self._queued[1], snapshot)
+            self._queued = (step, snapshot)
+            self.submitted += 1
+            self._cv.notify_all()
+
+    def drain(self) -> None:
+        """Block until every submitted snapshot has been handled; re-raise
+        the first handler error if any."""
+        with self._cv:
+            self._cv.wait_for(lambda: (self._queued is None
+                                       and not self._busy)
+                              or self._error is not None)
+            self._reraise()
+
+    def close(self) -> None:
+        """drain(), then stop the worker thread.  Idempotent."""
+        with self._cv:
+            if self._closed and not self._thread.is_alive():
+                self._reraise()
+                return
+            self._cv.wait_for(lambda: (self._queued is None
+                                       and not self._busy)
+                              or self._error is not None)
+            self._closed = True
+            self._cv.notify_all()
+        self._thread.join()
+        self._reraise()
+
+    def stats(self) -> dict:
+        return {"submitted": self.submitted, "processed": self.processed,
+                "dropped": self.dropped}
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- worker side -------------------------------------------------------
+
+    def _reraise(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            self._closed = True
+            raise err
+
+    def _loop(self):
+        while True:
+            with self._cv:
+                self._cv.wait_for(lambda: self._queued is not None
+                                  or self._closed)
+                if self._queued is None:          # closed, queue empty
+                    return
+                step, snap = self._queued
+                self._queued = None
+                self._busy = True
+            try:
+                self._handler(step, self._stage(snap))
+            except BaseException as e:            # surfaced at drain/close
+                with self._cv:
+                    self._error = e
+                    self._busy = False
+                    self._queued = None
+                    self._cv.notify_all()
+                return
+            with self._cv:
+                self.processed += 1
+                self._busy = False
+                self._cv.notify_all()

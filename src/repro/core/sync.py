@@ -242,6 +242,24 @@ def _ag_codes(spec, qs):
     return {b: out[b][0] for b in out}
 
 
+def pending_specs(run_cfg, spec):
+    """PartitionSpec tree of the pending sync (`make_sync_begin`'s output)
+    under a mesh-carrying ShardedFlatSpace — what a program that *threads*
+    the pending across its boundary (the RoundEngine's overlap round,
+    launch/shapes.py's lowering case) declares as the in/out sharding.
+
+    The reduce_scatter leg leaves the pending worker-sharded: each device
+    owns the 1/W sub-chunk of its shard it reduced, so payloads sit at
+    [W, N/W] over (worker_axes, shard_axes).  Quantized pending carries the
+    integer code-sums at that sharding plus the per-element scales, which
+    are shard-local only ([N] over shard_axes)."""
+    wt, st = _axt(spec.worker_axes), _axt(spec.shard_axes)
+    payload = {b: P(wt, st) for b in spec.buckets}
+    if run_cfg.sync_quantize:
+        return {"q": payload, "scale": {b: P(st) for b in spec.buckets}}
+    return payload
+
+
 def make_sync_begin(run_cfg, spec=None):
     """First half of the sync: the reduce.  begin(state) -> pending, a pure
     function of the pre-sync state (no state mutation).

@@ -27,7 +27,8 @@ from repro.launch.shapes import SHAPES, build_case
 
 def run_one(arch, shape, *, multi_pod, policy=None,
             parallel_baseline=False, run_cfg=None,
-            engine="legacy", layout="tree", verbose=True):
+            engine="legacy", layout="tree", sync="blocking",
+            overlap_depth=0, verbose=True):
     from repro.configs import registry as R
 
     policy = policy or R.get_policy(arch)
@@ -35,7 +36,8 @@ def run_one(arch, shape, *, multi_pod, policy=None,
     n_dev = mesh.devices.size
     case = build_case(arch, shape, mesh, policy=policy,
                       run_cfg=run_cfg, parallel_baseline=parallel_baseline,
-                      engine=engine, layout=layout)
+                      engine=engine, layout=layout, sync=sync,
+                      overlap_depth=overlap_depth)
     t0 = time.time()
     with mesh:
         jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
@@ -53,6 +55,9 @@ def run_one(arch, shape, *, multi_pod, policy=None,
         "h": case.meta.get("h"),
         "hp": case.meta.get("hp"),
         "layout": case.meta.get("layout", "tree"),
+        "sync": case.meta.get("sync", "blocking"),
+        "overlap_depth": case.meta.get("overlap_depth"),
+        "pending_leaves": case.meta.get("pending_leaves"),
         "ring": case.meta.get("ring"),
         "kv_len": case.meta.get("kv_len"),
         "compile_s": round(t1 - t0, 1),
@@ -92,6 +97,17 @@ def main() -> None:
                          "device, the sync one reduce_scatter + one "
                          "all_gather per bucket (collective_result_bytes "
                          "shows the scatter leg landing 1/W per device)")
+    ap.add_argument("--sync", default="blocking",
+                    choices=["blocking", "overlap"],
+                    help="overlap (requires --engine bucketed): lower the "
+                         "pending-threaded steady-state round — "
+                         "fn(state, pending, ...) -> (state, new_pending, "
+                         "metrics), the program the RoundEngine runs under "
+                         "--sync overlap; the in-flight payload stays "
+                         "worker-sharded across the program boundary")
+    ap.add_argument("--overlap-depth", type=int, default=0,
+                    help="local steps lowered before the deferred "
+                         "gather/apply (--sync overlap)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -111,7 +127,9 @@ def main() -> None:
                                            policy=args.policy,
                                            parallel_baseline=args.parallel_baseline,
                                            engine=args.engine,
-                                           layout=args.param_layout))
+                                           layout=args.param_layout,
+                                           sync=args.sync,
+                                           overlap_depth=args.overlap_depth))
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     failures.append({"arch": arch, "shape": shape,

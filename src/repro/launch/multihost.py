@@ -277,7 +277,8 @@ def run_sync(*, mesh: str = "2x2x2", policy: str = "fsdp",
 def run_engine(*, mesh: str = "2x2x2", policy: str = "fsdp",
                quantize: bool = True, momentum: float = 0.0,
                rounds: int = 2, seed: int = 0,
-               arch: str = "starcoder2-3b") -> dict:
+               arch: str = "starcoder2-3b", sync: str = "blocking",
+               overlap_depth: int = 0) -> dict:
     """Execute full RoundEngine communication rounds (local steps + sharded
     sync) on the global mesh, across real process boundaries: the engine is
     built exactly as single-process — same config, same mesh axes — with
@@ -288,7 +289,18 @@ def run_engine(*, mesh: str = "2x2x2", policy: str = "fsdp",
     of the same mesh produces bitwise-identical state shards when the sync
     is quantized (the only cross-worker reduction in a dp/fsdp round whose
     result feeds back into the state; integer codes make it
-    order-independent)."""
+    order-independent).
+
+    sync="overlap": the round programs thread the pending reduce across
+    their boundaries (engine `--sync overlap` — `make_sync_begin` at each
+    round's end, the gather/apply inside the next program), with the
+    pending's worker-sharded payload living on the distributed devices
+    between programs.  A blocking engine runs the same trajectory alongside
+    as the in-process reference; at depth 0 the flushed overlap state must
+    match it BITWISE, shard for shard, on any mesh/process split (identical
+    op sequence, deterministic collectives — tests/test_sharded.py proves
+    the host edition).  Depth > 0 is the correction form: finite and close,
+    reported but not asserted bitwise."""
     import jax
     import numpy as np
 
@@ -308,26 +320,60 @@ def run_engine(*, mesh: str = "2x2x2", policy: str = "fsdp",
                         weight_decay=0.01, sync_quantize=quantize,
                         outer_momentum=momentum, sharding=policy)
     w = pm.worker_count(policy, jmesh)
-    eng = RoundEngine(cfg, run_cfg, workers=w, b_loc=2, seq=16, seed=seed,
-                      data="device", layout="flat_sharded",
-                      mesh=jmesh, policy=policy)
+    mk = lambda s, d: RoundEngine(cfg, run_cfg, workers=w, b_loc=2, seq=16,
+                                  seed=seed, data="device",
+                                  layout="flat_sharded", sync=s,
+                                  overlap_depth=d, mesh=jmesh, policy=policy)
+    eng = mk(sync, overlap_depth)
+    ref = mk("blocking", 0) if sync == "overlap" else None
     lr_fn = make_lr_fn(run_cfg)
     state = eng.init_state()
-    losses = []
+    ref_state = ref.init_state() if ref else None
+    losses, ref_losses = [], []
     for t, h in schedules.rounds(run_cfg, lr_fn):
         state, m = eng.run_round(state, t, h, lr_fn)
         losses.append(float(m["loss"]))
-    hashes = {}
-    for k in ("params", "anchor"):
-        if k in state:
-            for b, arr in state[k].items():
-                hashes.update(_shard_hashes(f"{k}/{b}", arr))
+        if ref:
+            ref_state, mr = ref.run_round(ref_state, t, h, lr_fn)
+            ref_losses.append(float(mr["loss"]))
+    state = eng.flush(state)
+
+    def hash_state(st, tag=""):
+        out = {}
+        for k in ("params", "anchor"):
+            if k in st:
+                for b, arr in st[k].items():
+                    out.update(_shard_hashes(f"{tag}{k}/{b}", arr))
+        return out
+
+    hashes = hash_state(state)
+    ok = all(np.isfinite(losses))
+    rec = {}
+    if ref:
+        max_diff = 0.0
+        for k in ("params", "anchor"):
+            if k in state:
+                for b in state[k]:
+                    for s, r in zip(state[k][b].addressable_shards,
+                                    ref_state[k][b].addressable_shards):
+                        a = np.asarray(s.data, np.float32)
+                        bb = np.asarray(r.data, np.float32)
+                        if a.size:
+                            max_diff = max(max_diff,
+                                           float(np.max(np.abs(a - bb))))
+        matches = max_diff == 0.0
+        if overlap_depth == 0:
+            ok = ok and matches
+        rec = {"blocking_losses": ref_losses,
+               "overlap_matches_blocking": matches,
+               "max_abs_diff_vs_blocking": max_diff}
     info = runtime_info()
     return {
-        "mode": "engine", "ok": all(np.isfinite(losses)), "losses": losses,
+        "mode": "engine", "ok": ok, "losses": losses,
         "shard_hashes": hashes, "mesh": mesh, "policy": policy, "workers": w,
         "quantize": quantize, "momentum": momentum, "rounds": len(losses),
-        "arch": arch, **info,
+        "sync": sync, "overlap_depth": overlap_depth,
+        "arch": arch, **rec, **info,
     }
 
 
@@ -420,6 +466,15 @@ def main() -> None:
     ap.add_argument("--overlap", action="store_true",
                     help="sync mode: split begin/apply across round "
                          "boundaries (the engine's --sync overlap seam)")
+    ap.add_argument("--sync", default="blocking",
+                    choices=["blocking", "overlap"],
+                    help="engine mode: run the RoundEngine rounds with the "
+                         "pending reduce threaded across program boundaries "
+                         "(--sync overlap); a blocking engine runs alongside "
+                         "as the in-process bitwise reference at depth 0")
+    ap.add_argument("--overlap-depth", type=int, default=0,
+                    help="engine mode: local steps run on stale params "
+                         "before the deferred gather applies")
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--arch", default="starcoder2-3b")
@@ -429,7 +484,8 @@ def main() -> None:
         extra = ["--mode", args.mode, "--mesh", args.mesh,
                  "--policy", args.policy, "--momentum", str(args.momentum),
                  "--rounds", str(args.rounds), "--seed", str(args.seed),
-                 "--arch", args.arch]
+                 "--arch", args.arch, "--sync", args.sync,
+                 "--overlap-depth", str(args.overlap_depth)]
         if args.quantize:
             extra.append("--quantize")
         if args.overlap:
@@ -455,7 +511,8 @@ def main() -> None:
     elif args.mode == "engine":
         out = run_engine(mesh=args.mesh, policy=args.policy,
                          quantize=args.quantize, momentum=args.momentum,
-                         rounds=args.rounds, seed=args.seed, arch=args.arch)
+                         rounds=args.rounds, seed=args.seed, arch=args.arch,
+                         sync=args.sync, overlap_depth=args.overlap_depth)
     else:
         out = run_sync(mesh=args.mesh, policy=args.policy,
                        quantize=args.quantize, momentum=args.momentum,

@@ -166,7 +166,8 @@ class Case:
 def build_case(arch: str, shape_name: str, mesh, *, policy: str,
                run_cfg: RunConfig | None = None, h: int | None = None,
                parallel_baseline: bool = False,
-               engine: str = "legacy", layout: str = "tree") -> Case:
+               engine: str = "legacy", layout: str = "tree",
+               sync: str = "blocking", overlap_depth: int = 0) -> Case:
     from repro.configs import registry as R
 
     cfg = R.get_config(arch)
@@ -182,7 +183,8 @@ def build_case(arch: str, shape_name: str, mesh, *, policy: str,
                                         dtype, sizes)
         return _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype,
                                  sizes, h or run_cfg.h_base, engine=engine,
-                                 layout=layout)
+                                 layout=layout, sync=sync,
+                                 overlap_depth=overlap_depth)
     if shape.mode == "prefill":
         return _prefill_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes)
     return _decode_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes,
@@ -194,7 +196,8 @@ def build_case(arch: str, shape_name: str, mesh, *, policy: str,
 # --------------------------------------------------------------------------
 
 def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
-                      *, engine: str = "legacy", layout: str = "tree"):
+                      *, engine: str = "legacy", layout: str = "tree",
+                      sync: str = "blocking", overlap_depth: int = 0):
     """engine="legacy": the seed's exact-H `train_round`.
     engine="bucketed": the RoundEngine's padded program — batches/lrs padded
     to the power-of-two bucket Hp plus a replicated [Hp] validity mask; the
@@ -202,10 +205,25 @@ def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
     layout="flat" (bucketed only): the state is FlatParamSpace dtype buckets
     — lowering this proves the per-sync all-reduce count is O(#buckets).
     layout="flat_sharded": ShardedFlatSpace chunks — state stored 1/S per
-    device and the sync an explicit reduce_scatter + all_gather pair."""
+    device and the sync an explicit reduce_scatter + all_gather pair.
+    sync="overlap" (bucketed only): the pending-threaded steady-state round
+    — fn(state, pending, data, lrs, mask) -> (state, new_pending, metrics),
+    exactly the program the RoundEngine runs every round after the first
+    under `--sync overlap`.  The pending rides the signature at the sharding
+    the reduce_scatter leg leaves it (core/sync.py `pending_specs`), so the
+    lowering proves the deferred gather stays a per-bucket all_gather and
+    the in-flight payload stays worker-sharded across the program boundary."""
     assert layout in ("tree", "flat", "flat_sharded"), layout
     assert layout == "tree" or engine == "bucketed", \
         "the flat layouts run through the RoundEngine's bucketed program"
+    # real errors, not asserts: the dryrun is a launch-script surface that
+    # runs under `python -O` — a stripped guard would silently lower the
+    # blocking program and report the overlap case as ok
+    if sync not in ("blocking", "overlap"):
+        raise ValueError(f"unknown sync mode {sync!r}")
+    if sync == "overlap" and engine != "bucketed":
+        raise ValueError("the overlap round is a bucketed-engine program: "
+                         "pass engine='bucketed' with sync='overlap'")
     w = pm.worker_count(policy, mesh)
     waxes = pm.worker_mesh_axes(policy, mesh)
     waxes = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
@@ -224,13 +242,36 @@ def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
     bspec = _batch_specs(cfg, 1, waxes, inner_data)
 
     if engine == "bucketed":
-        from repro.core.engine import bucket_pow2, make_bucketed_round
+        from repro.core.engine import (bucket_pow2, make_bucketed_round,
+                                       make_overlap_round)
         hp = bucket_pow2(h)
         batches = _batch_abstract(cfg, (hp, w, b_loc), shape.seq_len)
         lrs = SDS((hp,), jnp.float32)
         mask = SDS((hp,), jnp.bool_)
-        round_fn = make_bucketed_round(cfg, run_cfg, spec=spec)
         mspec = {"loss": P(), "grad_norm": P(), "divergence": P()}
+        if sync == "overlap":
+            from repro.core.sync import make_sync_begin, pending_specs
+            round_fn = make_overlap_round(cfg, run_cfg, spec=spec,
+                                          depth=overlap_depth,
+                                          apply_pending=True)
+            # the in-flight reduce: abstract shapes from the begin leg
+            # itself, shardings as the reduce_scatter left them (None for
+            # the non-collective layouts: GSPMD propagates)
+            pending = jax.eval_shape(make_sync_begin(run_cfg, spec), state)
+            pend_sh = (_ns(mesh, pending_specs(run_cfg, spec))
+                       if getattr(spec, "mesh", None) is not None else None)
+            in_sh = (_ns(mesh, sspec), pend_sh, _ns(mesh, bspec),
+                     NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+            out_sh = (_ns(mesh, sspec), pend_sh, _ns(mesh, mspec))
+            return Case(round_fn, (state, pending, batches, lrs, mask),
+                        in_sh, out_sh,
+                        meta={"cfg": cfg, "w": w, "b_loc": b_loc, "h": h,
+                              "hp": hp, "fn_name": "train_round_overlap",
+                              "layout": layout, "sync": sync,
+                              "overlap_depth": overlap_depth,
+                              "pending_leaves": len(jax.tree.leaves(pending)),
+                              "steps_per_program": h})
+        round_fn = make_bucketed_round(cfg, run_cfg, spec=spec)
         in_sh = (_ns(mesh, sspec), _ns(mesh, bspec), NamedSharding(mesh, P()),
                  NamedSharding(mesh, P()))
         out_sh = (_ns(mesh, sspec), _ns(mesh, mspec))

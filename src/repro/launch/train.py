@@ -33,6 +33,7 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
           engine: str = "bucketed", data: str = "device",
           layout: str = "tree", sync: str = "blocking",
           overlap_depth: int = 0, eval_fn=None,
+          async_observer: bool = False,
           eng: RoundEngine | None = None):
     """Run a full training run; returns (state, history).
 
@@ -42,6 +43,15 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
     one is built from the `engine`/`data`/`layout`/`sync` mode flags.
     With sync="overlap" the in-flight reduce is flushed at checkpoints and
     before returning, so the returned state is always the synced consensus.
+
+    async_observer=True moves eval and mid-run checkpoints off the round
+    loop: the engine's synced_view (pure — the overlap pipeline is
+    untouched) is submitted to a background AsyncObserver worker
+    (core/observer.py) that device_gets and runs `eval_fn` / writes the
+    checkpoint on a host thread, double-buffered so the training stream
+    never blocks on observer I/O.  Mid-run checkpoints are then written
+    from the consensus view WITHOUT forcing a sync point; the final
+    checkpoint is still written synchronously after the run's flush.
     """
     if eng is None:
         eng = RoundEngine(cfg, run_cfg, workers=workers, b_loc=b_loc,
@@ -67,6 +77,23 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
         print(f"restored checkpoint at round boundary {step0} "
               f"({len(eng.h_trace)} rounds done)")
 
+    observer = None
+    if async_observer and (eval_fn is not None or ckpt_dir):
+        from repro.core.observer import AsyncObserver
+
+        def handle(step, snap):
+            # worker thread: snap is the staged (host) consensus view
+            if eval_fn is not None:
+                eval_fn(step, snap["state"])
+            if snap.get("save"):
+                ckpt_io.save(ckpt_dir, snap["state"], step=step,
+                             extra=snap["extra"])
+        # a superseded snapshot's checkpoint request rides the newer one
+        # (the newer consensus is a strictly better checkpoint)
+        observer = AsyncObserver(
+            handle, merge=lambda old, new: ({**new, "save": True}
+                                            if old.get("save") else new))
+
     history = []
     t_start = time.time()
     t = saved_at = step0
@@ -83,19 +110,39 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
                   f"div {float(m['divergence']):.4f}  "
                   f"compiles {cs['compiles']} (hits {cs['cache_hits']})  "
                   f"({time.time()-t_start:.1f}s)")
-        if eval_fn is not None:
-            # overlap mode: observers see the synced consensus (pure view;
-            # the in-flight pipeline is untouched), so eval curves match
-            # blocking-sync runs
-            eval_fn(t, eng.synced_view(state))
-        if ckpt_dir and t % max(run_cfg.total_steps // 4, 1) == 0:
-            # overlap mode: a checkpoint is a forced sync point — the
-            # in-flight reduce is applied so the saved state is a round
-            # boundary in the blocking sense
-            state = eng.flush(state)
-            eng.save(ckpt_dir, state, step=t)
-            saved_at = t
+        want_ckpt = bool(ckpt_dir) and \
+            t % max(run_cfg.total_steps // 4, 1) == 0
+        if observer is not None:
+            if eval_fn is not None or want_ckpt:
+                # overlap mode: observers see the synced consensus (pure
+                # view; the in-flight pipeline is untouched), so eval curves
+                # and checkpoints match blocking-sync runs — device_get and
+                # I/O happen on the observer thread, not here
+                snap = eng.synced_view(state)
+                if snap is state and eng.donate:
+                    # blocking sync: the view IS the live state, whose
+                    # buffers the next round donates — give the observer
+                    # its own copy (async device op, no host sync)
+                    import jax
+                    import jax.numpy as jnp
+                    snap = jax.tree.map(jnp.copy, state)
+                observer.submit(t, {"state": snap, "save": want_ckpt,
+                                    "extra": eng.checkpoint_extra()})
+                if want_ckpt:
+                    saved_at = t
+        else:
+            if eval_fn is not None:
+                eval_fn(t, eng.synced_view(state))
+            if want_ckpt:
+                # overlap mode: a checkpoint is a forced sync point — the
+                # in-flight reduce is applied so the saved state is a round
+                # boundary in the blocking sense
+                state = eng.flush(state)
+                eng.save(ckpt_dir, state, step=t)
+                saved_at = t
     state = eng.flush(state)
+    if observer is not None:
+        observer.close()
     if ckpt_dir and saved_at != t:
         eng.save(ckpt_dir, state, step=t)
     return state, history
@@ -151,6 +198,12 @@ def main():
     ap.add_argument("--policy", default="dp", choices=["dp", "fsdp"],
                     help="sharding policy naming the mesh's worker axes "
                          "(dp: every data rank; fsdp: one worker per pod)")
+    ap.add_argument("--async-observer", action="store_true",
+                    help="run eval + mid-run checkpoints on a background "
+                         "host thread fed by the engine's synced_view "
+                         "(core/observer.py): device_get and checkpoint "
+                         "I/O leave the round loop's critical path, "
+                         "double-buffered so training never blocks")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--workers", type=int, default=4)
@@ -183,7 +236,7 @@ def main():
                         seq=args.seq, ckpt_dir=args.ckpt, engine=args.engine,
                         data=args.data, layout=args.param_layout,
                         sync=args.sync, overlap_depth=args.overlap_depth,
-                        eng=eng)
+                        async_observer=args.async_observer, eng=eng)
     losses = [l for _, _, l, _ in hist]
     if not losses:
         print("nothing to do: checkpoint already at "

@@ -186,5 +186,38 @@ def test_restore_rejects_truncated_trace():
     eng.h_trace = [(0, 2)]  # claims 2 steps done
     with tempfile.TemporaryDirectory() as d:
         eng.save(d, state, step=3)  # ...but the step says 3: not a boundary
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="round boundary"):
             eng.restore(d, eng.init_state())
+
+
+# ------------------------------------------------- schedule-domain clamp --
+
+def test_padded_lr_queries_clamped_to_schedule_domain():
+    """run_round pads H up to the pow2 bucket; the padded lanes' lr queries
+    must never leave the schedule's domain [0, total_steps) — a decay
+    schedule queried past it can return negative/undefined values (or
+    raise).  Regression: the truncated final round used to evaluate
+    lr_fn(t + i) for all hp padded steps, walking past total_steps."""
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = _run_cfg(schedule="constant", total_steps=6, h_base=3,
+                   warmup_steps=1)
+    lr_fn = make_lr_fn(run)
+
+    def strict_lr(t):
+        if t >= run.total_steps:
+            raise ValueError(f"schedule queried past its domain: step {t}")
+        return lr_fn(t)
+
+    trace = list(schedules.rounds(run, strict_lr))
+    assert any(E.bucket_pow2(h) != h for _, h in trace), \
+        "config must exercise a padded round"
+    eng = E.RoundEngine(cfg, run, workers=2, b_loc=2, seq=16, data="host")
+    ref = E.RoundEngine(cfg, run, workers=2, b_loc=2, seq=16, data="host")
+    st, sr = eng.init_state(), ref.init_state()
+    for t, h in trace:
+        st, _ = eng.run_round(st, t, h, strict_lr)   # must not raise
+        sr, _ = ref.run_round(sr, t, h, lr_fn)
+    # the clamp pads with the last valid step's lr — masked lanes never
+    # apply one, so the trajectory is bitwise that of the permissive lr_fn
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(sr)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

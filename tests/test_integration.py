@@ -135,6 +135,26 @@ print("OK", float(loss))
 
 
 @pytest.mark.slow
+def test_dryrun_overlap_lowering_subprocess():
+    """ROADMAP's overlap-aware dryrun item: the pending-threaded overlap
+    round (`fn(state, pending, ...) -> (state, new_pending, metrics)`)
+    lowers + compiles on the production 16x16 mesh through the dryrun
+    driver, with the pending's shardings taken from sync.pending_specs —
+    exactly the steady-state program the RoundEngine runs under
+    `--sync overlap` on a mesh."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "starcoder2-3b", "--shape", "train_4k",
+         "--engine", "bucketed", "--param-layout", "flat_sharded",
+         "--sync", "overlap", "--overlap-depth", "1"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "train_round_overlap" in out.stdout
+    assert "1 ok, 0 failed" in out.stdout
+
+
+@pytest.mark.slow
 def test_fsdp_moe_shard_map_subprocess():
     """fsdp policy + explicit shard_map MoE dispatch EXECUTES correctly on an
     8-device host mesh (the kimi-k2 §Perf configuration, reduced)."""

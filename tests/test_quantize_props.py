@@ -145,3 +145,43 @@ def test_integer_code_mean_is_order_independent(w, n, seed):
     assert info.min <= exact.min() and exact.max() <= info.max
     np.testing.assert_array_equal(q.astype(wdt).sum(axis=0, dtype=wdt),
                                   exact.astype(wdt))
+
+
+# ------------------------------------------- wire_dtype boundary ----------
+
+@pytest.mark.parametrize("w,want", [
+    (1, jnp.int16), (2, jnp.int16), (257, jnp.int16),
+    (258, jnp.int16),     # 258 * 127 = 32766 — the last int16 worker count
+    (259, jnp.int32),     # 259 * 127 = 32893 > int16 max: crossover
+    (1024, jnp.int32),
+])
+def test_wire_dtype_boundary(w, want):
+    """The int16 -> int32 crossover sits exactly at W = 258 -> 259
+    (W * 127 < 2^15): wire_dtype must flip there, one worker late is an
+    overflowing reduce-scatter."""
+    assert wire_dtype(w) == want
+
+
+@pytest.mark.parametrize("w", [258, 259])
+def test_wire_dtype_exact_sum_at_extremes(w):
+    """Exact-sum boundary cases at the crossover: the worst-case code sums
+    Σq = ±W·127 (every worker saturating the int8 grid the same way) must
+    fit wire_dtype(W) exactly, in any accumulation order — including the
+    chunked partial sums a reduce_scatter produces."""
+    wdt = np.dtype(wire_dtype(w))
+    info = np.iinfo(wdt)
+    for sign in (1, -1):
+        q = np.full((w, 16), sign * 127, np.int64)
+        exact = q.sum(axis=0)                       # ±w*127, int64
+        assert info.min <= exact.min() and exact.max() <= info.max
+        # one-shot accumulation in the wire dtype
+        np.testing.assert_array_equal(
+            q.astype(wdt).sum(axis=0, dtype=wdt), exact.astype(wdt))
+        # arbitrary chunked partial sums (the collective's fold) stay exact
+        acc = np.zeros(16, wdt)
+        for lo in range(0, w, 37):
+            acc = acc + q[lo:lo + 37].astype(wdt).sum(axis=0, dtype=wdt)
+        np.testing.assert_array_equal(acc, exact.astype(wdt))
+    # the crossover is tight: 258 is the last count whose extreme sum fits
+    # int16, 259 overflows it
+    assert 258 * 127 <= np.iinfo(np.int16).max < 259 * 127

@@ -271,17 +271,124 @@ def test_cross_layout_checkpoint_all_three():
                                                   np.asarray(b))
 
 
-def test_save_requires_flush_in_overlap_mode():
+def test_save_requires_flush_or_explicit_flush_pending_in_overlap_mode():
+    """The overlap checkpoint guard is a real PendingSyncError — not a bare
+    assert stripped under `python -O` — and save(flush_pending=True) writes
+    the synced consensus WITHOUT consuming the in-flight pipeline."""
     mk, trace, lr_fn = _engines("qsr", "adamw", False, 0.0, steps=2)
     eo = mk(layout="flat_sharded", shards=SHARDS, sync="overlap")
     so = eo.init_state()
     t, h = trace[0]
     so, _ = eo.run_round(so, t, h, lr_fn)
     with tempfile.TemporaryDirectory() as d:
-        with pytest.raises(AssertionError, match="flush"):
+        with pytest.raises(E.PendingSyncError, match="flush"):
             eo.save(d, so, step=h)
+        eo.save(d, so, step=h, flush_pending=True)   # consensus written...
+        assert eo._pending is not None               # ...pipeline untouched
+        # what was written IS the flushed state, bitwise
+        flushed = eo.flush(so)
+        restored, step = mk(layout="flat_sharded", shards=SHARDS).restore(
+            d, mk(layout="flat_sharded", shards=SHARDS).init_state())
+        assert step == h
+        for a, b in zip(jax.tree.leaves(restored),
+                        jax.tree.leaves(flushed)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_save_guard_survives_python_O():
+    """Run the overlap save guard under `python -O` in a subprocess: the
+    old bare `assert self._pending is None` was stripped there, silently
+    checkpointing pre-consensus params.  PendingSyncError must survive."""
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep +
+               os.environ.get("PYTHONPATH", ""))
+    code = (
+        "import tempfile\n"
+        "from repro.configs import registry as R\n"
+        "from repro.configs.base import RunConfig\n"
+        "from repro.core.engine import RoundEngine, PendingSyncError\n"
+        "cfg = R.get_smoke_config('starcoder2-3b')\n"
+        "run = RunConfig(schedule='constant', total_steps=4, h_base=2,\n"
+        "                remat=False)\n"
+        "eng = RoundEngine(cfg, run, workers=2, b_loc=2, seq=16,\n"
+        "                  sync='overlap')\n"
+        "eng._pending = {'stub': None}   # an in-flight reduce\n"
+        "with tempfile.TemporaryDirectory() as d:\n"
+        "    try:\n"
+        "        eng.save(d, {}, step=0)\n"
+        "    except PendingSyncError:\n"
+        "        print('RAISED')\n"
+        "    try:\n"
+        "        eng.params_single({'params': {}})\n"
+        "    except PendingSyncError:\n"
+        "        print('RAISED2')\n")
+    out = subprocess.run([sys.executable, "-O", "-c", code],
+                         capture_output=True, text=True, env=env,
+                         timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "RAISED" in out.stdout and "RAISED2" in out.stdout
+
+
+def test_restore_refuses_live_pending():
+    """restore() over an in-flight sync would orphan the pending reduce —
+    it must refuse (PendingSyncError), not silently drop it."""
+    mk, trace, lr_fn = _engines("qsr", "adamw", False, 0.0, steps=4)
+    eb = mk(layout="flat_sharded", shards=SHARDS)
+    sb = eb.init_state()
+    for t, h in trace:
+        sb, _ = eb.run_round(sb, t, h, lr_fn)
+    eo = mk(layout="flat_sharded", shards=SHARDS, sync="overlap")
+    so = eo.init_state()
+    t, h = trace[0]
+    so, _ = eo.run_round(so, t, h, lr_fn)
+    assert eo._pending is not None
+    with tempfile.TemporaryDirectory() as d:
+        eb.save(d, sb, step=4)
+        with pytest.raises(E.PendingSyncError, match="orphan"):
+            eo.restore(d, eo.init_state())
         so = eo.flush(so)
-        eo.save(d, so, step=h)   # now fine
+        restored, step = eo.restore(d, eo.init_state())  # now fine
+        assert step == 4
+
+
+@pytest.mark.parametrize("dst_layout,dst_kw", [
+    ("tree", {}),
+    ("flat", {}),
+    ("flat_sharded", {"shards": SHARDS}),
+])
+def test_save_under_overlap_restores_to_blocking_trajectory(dst_layout,
+                                                            dst_kw):
+    """The overlap rows of the cross-layout restore matrix: a checkpoint
+    written MID-overlap (flush_pending=True, reduce still in flight) holds
+    the blocking consensus — restoring it into any layout and finishing
+    the run under blocking sync lands bitwise on the full blocking
+    trajectory.  A pre-consensus state is impossible to observe."""
+    mk, trace, lr_fn = _engines("qsr", "adamw", True, 0.9)
+    cut = len(trace) // 2
+    t_cut = trace[cut][0]
+
+    eb = mk(layout=dst_layout, **dst_kw)                 # blocking reference
+    sb = eb.init_state()
+    for t, h in trace:
+        sb, _ = eb.run_round(sb, t, h, lr_fn)
+
+    eo = mk(layout="flat_sharded", shards=SHARDS, sync="overlap")
+    so = eo.init_state()
+    for t, h in trace[:cut]:
+        so, _ = eo.run_round(so, t, h, lr_fn)
+    assert eo._pending is not None, "a reduce must be in flight at the cut"
+    with tempfile.TemporaryDirectory() as d:
+        eo.save(d, so, step=t_cut, flush_pending=True)
+        assert eo._pending is not None                  # pipeline untouched
+        er = mk(layout=dst_layout, **dst_kw)
+        sr, step = er.restore(d, er.init_state())
+        assert step == t_cut and er.h_trace == trace[:cut]
+    for t, h in trace[cut:]:
+        sr, _ = er.run_round(sr, t, h, lr_fn)
+    la, ta = jax.tree.flatten(sb)
+    lb, tb = jax.tree.flatten(sr)
+    assert ta == tb
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # ------------------------------------------------- lowering proof (HLO) ---
