@@ -1,9 +1,20 @@
 """§Perf report: assemble the hillclimb iteration tables (baseline vs each
-variant) from experiments/dryrun + experiments/perf records."""
+variant) from experiments/dryrun + experiments/perf records.
+
+Record paths resolve relative to the REPO ROOT, not the caller's cwd, and a
+missing or malformed record is a WARNING (stderr) + a skipped row, never a
+crash: CI runs this report on checkouts that carry only a subset of the
+experiment records, and the report's job is to show what is there."""
 from __future__ import annotations
 
 import json
 import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if __package__ in (None, ""):          # run as a script: python benchmarks/…
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))   # repro.* for roofline
 
 from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
@@ -77,14 +88,29 @@ def run(csv_rows: list | None = None) -> None:
         print(f"{'variant':42s} {'compute':>8s} {'memory':>8s} {'coll':>8s} "
               f"{'bound':>8s} {'temp':>9s} {'vs base':>8s}")
         for label, path in variants:
-            if not os.path.exists(path):
+            full = os.path.join(_ROOT, path)
+            if not os.path.exists(full):
                 print(f"{label:42s}   (missing)")
+                print(f"perf_report: WARNING skipping missing record {path}",
+                      file=sys.stderr)
                 continue
-            rec = json.load(open(path))
+            try:
+                rec = json.load(open(full))
+            except (json.JSONDecodeError, OSError) as e:
+                print(f"{label:42s}   (unreadable)")
+                print(f"perf_report: WARNING unreadable record {path}: {e}",
+                      file=sys.stderr)
+                continue
             if not rec.get("ok", True):
                 print(f"{label:42s}   FAILED")
                 continue
-            m = _metrics(rec)
+            try:
+                m = _metrics(rec)
+            except KeyError as e:
+                print(f"{label:42s}   (malformed)")
+                print(f"perf_report: WARNING record {path} missing {e}",
+                      file=sys.stderr)
+                continue
             if base is None:
                 base = m
             ratio = m["bound_s"] / base["bound_s"]

@@ -15,6 +15,17 @@ E[g_x] = x * Var(y), with Var(y) set by the OU equilibrium of the
 optimizer's own noise.  Defs 3.1-3.3 predict the decay rate of E[x^2]:
   1/(2B) for parallel SGD, K/(2B) for Local SGD with QSR (K times larger),
   in between for H ~ eta^-1.  We measure exactly those ratios.
+
+Two ring-int8 drift measurements ride along (README §Wire modes):
+
+  * `requant_hops=K` injects the per-hop requantization noise model into
+    the sync: the ring's K-hop chain replaces the exact worker mean with
+    mean + err, |err| <= 2 (K+1)/254 * max|worker - mean| (the bound
+    core/sync.py ring_tolerance charges per round).  The QSR drift
+    ordering must survive the noisy wire — asserted in run().
+  * ring_ab() is the model-free check: the REAL smoke transformer trained
+    twice from identical seeds, exact int-codes wire vs ring-int8, end-of-
+    run loss delta and param divergence reported against ring_tolerance.
 """
 from __future__ import annotations
 
@@ -24,13 +35,27 @@ import numpy as np
 def simulate(schedule: str, *, k: int = 8, eta: float = 0.02,
              alpha: float = 0.25, beta: float = 0.4, steps: int = 200_000,
              b_loc: int = 1, sigma: float = 1.0, x0: float = 1.0,
-             seed: int = 0) -> float:
+             seed: int = 0, requant_hops: int = 0) -> float:
     """Returns the measured decay rate of log E[x^2] per unit slow-SDE time
-    (t = steps * eta^2)."""
+    (t = steps * eta^2).
+
+    requant_hops > 0 turns each sync's exact worker mean into the ring-int8
+    noise model: every worker receives mean + err with err drawn uniformly
+    inside the per-round re-quantization bound 2 (hops+1)/254 * max|delta|
+    (all workers get the SAME err — the ring all-gathers one owner-computed
+    value, so the wire noise is common-mode, not per-worker)."""
     rng = np.random.RandomState(seed)
     n_rep = 256  # independent replicates for expectation
     x = np.full((n_rep, k), x0)
     y = np.zeros((n_rep, k))
+
+    def ring_mean(v):
+        m = v.mean(axis=1, keepdims=True)
+        if requant_hops:
+            bound = 2.0 * (requant_hops + 1) / 254.0
+            amax = np.abs(v - m).max(axis=1, keepdims=True)
+            m = m + bound * amax * rng.uniform(-1.0, 1.0, m.shape)
+        return m
 
     if schedule == "parallel":
         h = 1
@@ -56,8 +81,8 @@ def simulate(schedule: str, *, k: int = 8, eta: float = 0.02,
             x = x - eta * gx
             y = y - eta * gy
             if (t + 1) % h == 0:
-                x[:] = x.mean(axis=1, keepdims=True)
-                y[:] = y.mean(axis=1, keepdims=True)
+                x[:] = ring_mean(x)
+                y[:] = ring_mean(y)
         if (t + 1) % max(steps // 200, 1) == 0:
             ex2 = float((x.mean(axis=1) ** 2).mean())
             times.append((t + 1) * eta ** 2)  # slow-SDE time
@@ -76,6 +101,74 @@ def simulate(schedule: str, *, k: int = 8, eta: float = 0.02,
     return float(-slope)
 
 
+def ring_ab(csv_rows: list | None = None, *, rounds: int = 4, h: int = 4,
+            workers: int = 2, b_loc: int = 2, seq: int = 32) -> dict:
+    """The model-free drift measurement: train the smoke transformer twice
+    from identical seeds and data — exact int-codes wire vs ring-int8 —
+    and report the end-of-run loss delta and max param divergence.  The
+    divergence must stay within `ring_tolerance` of the engine's per-round
+    delta-amax heuristic (4 h lr per round, the multihost harness bound)
+    plus the output-dtype cast allowance: this is the measured price of
+    int8 on every hop, the number §Wire modes quotes."""
+    import jax
+    import numpy as np
+
+    from repro.configs import registry as R
+    from repro.configs.base import RunConfig
+    from repro.core import schedules
+    from repro.core.engine import RoundEngine
+    from repro.core.sync import ring_tolerance
+    from repro.optim.lr import make_lr_fn
+
+    cfg = R.get_smoke_config("starcoder2-3b")
+
+    def train(wire):
+        run_cfg = RunConfig(schedule="constant", h_base=h,
+                            total_steps=rounds * h, remat=False,
+                            sync_quantize=True, sync_wire=wire)
+        eng = RoundEngine(cfg, run_cfg, workers=workers, b_loc=b_loc,
+                          seq=seq, seed=0, layout="flat_sharded",
+                          sync="blocking")
+        lr_fn = make_lr_fn(run_cfg)
+        state, t, losses = eng.init_state(), 0, []
+        for _ in range(rounds):
+            hh = schedules.get_h(run_cfg, t, lr_fn)
+            state, m = eng.run_round(state, t, hh, lr_fn)
+            losses.append(float(m["loss"]))
+            t += hh
+        return losses, eng.flush(state), run_cfg
+
+    losses_e, st_e, _ = train("auto")
+    losses_r, st_r, rc = train("ring-int8")
+    div = excess = 0.0
+    for b in st_e["params"]:
+        a = np.asarray(st_e["params"][b], np.float32)
+        g = np.asarray(st_r["params"][b], np.float32)
+        if not a.size:
+            continue
+        d = np.abs(a - g)
+        div = max(div, float(np.max(d)))
+        # cast allowance: each round's anchor cast can straddle an output-
+        # dtype rounding boundary, worth one quantum per round (the
+        # multihost harness comparison rule)
+        eps = (2.0 ** -7 if "bfloat16" in b else 2.0 ** -23) * rounds
+        excess = max(excess, float(np.max(d - np.abs(a) * eps)))
+    tol = ring_tolerance(workers, 4.0 * h * rc.peak_lr, rounds)
+    loss_d = abs(losses_e[-1] - losses_r[-1])
+    print(f"  ring A/B ({rounds} rounds x h={h}, {workers} workers): "
+          f"final loss exact {losses_e[-1]:.4f} ring {losses_r[-1]:.4f} "
+          f"(|delta| {loss_d:.2e})")
+    print(f"  param divergence {div:.3e} (excess past cast allowance "
+          f"{excess:.3e} vs ring_tolerance {tol:.3e})")
+    assert all(np.isfinite(losses_r)), losses_r
+    assert excess <= tol, (excess, tol)
+    if csv_rows is not None:
+        csv_rows.append(("sde_drift/ring_ab/loss_delta", "", f"{loss_d:.2e}"))
+        csv_rows.append(("sde_drift/ring_ab/param_div", "", f"{div:.2e}"))
+    return {"loss_delta": loss_d, "param_div": div, "excess": excess,
+            "tol": tol}
+
+
 def run(csv_rows: list | None = None, *, fast: bool = True) -> None:
     print("\n== Slow-SDE drift (Thm 3.1): sharpness-reduction rate ==")
     k = 8
@@ -91,10 +184,20 @@ def run(csv_rows: list | None = None, *, fast: bool = True) -> None:
     # the ordering predicted by Defs 3.1-3.3:
     assert rates["qsr"] > rates["inverse"] > 0.5 * rates["parallel"], rates
     assert r_qsr > 2.0, r_qsr   # K-amplified drift clearly visible
+    # the ring wire's noise model must not disturb the QSR drift: K-1 hops
+    # of re-quantization on every sync, ordering and amplification intact
+    ring_rate = simulate("qsr", k=k, steps=steps, requant_hops=k - 1)
+    r_ring = ring_rate / max(rates["parallel"], 1e-9)
+    print(f"  qsr+ring-int8 noise model: rate {ring_rate:8.4f} "
+          f"({r_ring:.2f}x parallel)")
+    assert ring_rate > rates["inverse"], (ring_rate, rates)
+    assert r_ring > 2.0, r_ring
     if csv_rows is not None:
         for s, r in rates.items():
             csv_rows.append((f"sde_drift/{s}", "", f"{r:.4f}"))
         csv_rows.append(("sde_drift/qsr_vs_parallel", "", f"{r_qsr:.2f}x"))
+        csv_rows.append(("sde_drift/qsr_ring_noise", "", f"{ring_rate:.4f}"))
+    ring_ab(csv_rows, rounds=3 if fast else 4)
 
 
 if __name__ == "__main__":

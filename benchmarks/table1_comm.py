@@ -220,6 +220,76 @@ def sync_lowering_quantized(csv_rows: list | None = None, *,
         assert sh["bytes_on_wire"] * 2 <= rec["flat"]["bytes_on_wire"]
 
 
+def sync_lowering_ring(csv_rows: list | None = None, *,
+                       arch: str = "starcoder2-3b",
+                       meshes: tuple[tuple[str, str], ...] = (
+                           ("4x2", "dp"), ("2x2x2", "fsdp")),
+                       json_records: list | None = None) -> None:
+    """The ring-int8 wire budget vs the exact int-codes RS wire (README
+    §Wire modes).
+
+    `--wire ring-int8` swaps the one-shot reduce_scatter for W-1 re-
+    quantizing ppermute hops plus an int8 all-gather: every payload
+    collective carries s8 — the one-shot RS had to widen to wire_dtype(W)
+    (int16/int32) so the exact code sum cannot overflow, the ring re-centers
+    to a fresh int8 scale each hop instead.  Asserted per mesh: the payload
+    dtype split is s8-ONLY (zero s16/s32 payload — the acceptance proof),
+    zero payload all-reduces and reduce_scatters, >= (W-1) permute hops per
+    bucket, and >= 2x fewer bytes on wire than the int-codes sync.
+    """
+    print("\n== per-sync lowering, RING-INT8 vs int-codes RS "
+          f"({arch} smoke, flat_sharded) ==")
+    print(f"{'mesh':>8s} {'policy':>6s} {'wire':>10s} {'permutes':>8s} "
+          f"{'rs+ag':>6s} {'bytes/sync':>12s} {'payload dtypes':>16s} "
+          f"{'vs int-codes':>12s}")
+    env = dict(os.environ, PYTHONPATH=_SRC +
+               os.pathsep + os.environ.get("PYTHONPATH", ""))
+    for mesh, policy in meshes:
+        recs = {}
+        for wire in ("auto", "ring-int8"):
+            out = subprocess.run(
+                [sys.executable, "-m", "repro.launch.sync_compare",
+                 "--arch", arch, "--mesh", mesh, "--policy", policy,
+                 "--quantize", "--wire", wire,
+                 "--param-layout", "flat_sharded"],
+                capture_output=True, text=True, env=env, timeout=600)
+            assert out.returncode == 0, out.stderr[-2000:]
+            recs[wire] = json.loads(out.stdout)
+            if json_records is not None:
+                json_records.append({"mesh": mesh, "policy": policy,
+                                     "arch": arch, "quantize": True,
+                                     "wire": wire, "sync": recs[wire]})
+        # worker-axis size: dp's workers span the data axis (DxM meshes),
+        # fsdp's span the pod axis (PxDxM) — the leading field either way
+        w = int(mesh.split("x")[0])
+        for wire, label in (("auto", "int-codes"), ("ring-int8", "ring")):
+            r = recs[wire]["flat_sharded"]
+            ratio = (recs["auto"]["flat_sharded"]["bytes_on_wire"]
+                     / r["bytes_on_wire"])
+            dts = ",".join(f"{k}:{v}" for k, v in
+                           sorted(r["payload_ops_by_dtype"].items()))
+            print(f"{mesh:>8s} {policy:>6s} {label:>10s} "
+                  f"{r['collective_permute_ops']:8d} "
+                  f"{r['reduce_scatter_ops'] + r['all_gather_ops']:6d} "
+                  f"{r['bytes_on_wire']:12,d} {dts:>16s} {ratio:11.2f}x")
+            if csv_rows is not None:
+                base = f"table1_comm/sync_ring_{mesh}_{policy}_{label}"
+                csv_rows.append((f"{base}/bytes_on_wire", "",
+                                 str(r["bytes_on_wire"])))
+        ring = recs["ring-int8"]["flat_sharded"]
+        # int8 on every wire: every payload collective carries s8, none int16+
+        assert set(ring["payload_ops_by_dtype"]) == {"s8"}, \
+            ring["payload_ops_by_dtype"]
+        assert ring["payload_all_reduce_ops"] == 0
+        assert ring["reduce_scatter_ops"] == 0
+        assert ring["collective_permute_ops"] >= (w - 1) * ring["n_buckets"]
+        # >= 2x fewer bytes than the exact int-codes RS wire (acceptance)
+        assert ring["bytes_on_wire"] * 2 <= \
+            recs["auto"]["flat_sharded"]["bytes_on_wire"], \
+            (ring["bytes_on_wire"],
+             recs["auto"]["flat_sharded"]["bytes_on_wire"])
+
+
 def main() -> None:
     import argparse
 
@@ -232,6 +302,7 @@ def main() -> None:
     run()
     sync_lowering(json_records=records)
     sync_lowering_quantized(json_records=records)
+    sync_lowering_ring(json_records=records)
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"records": records}, f, indent=1)

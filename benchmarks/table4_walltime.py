@@ -184,14 +184,22 @@ def overlap_report(csv_rows: list | None = None,
     from repro.optim.lr import make_lr_fn
 
     cfg = R.get_smoke_config("starcoder2-3b")
-    run_cfg = RunConfig(schedule="constant", h_base=8, total_steps=96,
-                        remat=False)
-    lr_fn = make_lr_fn(run_cfg)
     print("\n== Table 4 extra column: blocking vs overlapped sync "
           "(smoke, measured) ==")
-    print(f"{'sync':>10s} {'depth':>6s} {'s/round':>9s} {'rounds':>7s}")
+    print(f"{'sync':>10s} {'depth':>6s} {'wire':>10s} {'s/round':>9s} "
+          f"{'rounds':>7s}")
     base = None
-    for sync, depth in (("blocking", 0), ("overlap", 1)):
+    # the ring-int8 row measures the wire-mode's compute cost on the same
+    # harness: per-hop requantization trades arithmetic for bytes, and the
+    # honest CPU number is what the autotuner's s/round axis weighs against
+    # the ~2.3x byte cut (launch/autotune.py)
+    for sync, depth, wire in (("blocking", 0, "auto"),
+                              ("overlap", 1, "auto"),
+                              ("blocking", 0, "ring-int8")):
+        run_cfg = RunConfig(schedule="constant", h_base=8, total_steps=96,
+                            remat=False, sync_quantize=wire == "ring-int8",
+                            sync_wire=wire)
+        lr_fn = make_lr_fn(run_cfg)
         eng = RoundEngine(cfg, run_cfg, workers=2, b_loc=2, seq=32,
                           layout="flat_sharded", sync=sync,
                           overlap_depth=depth)
@@ -216,16 +224,23 @@ def overlap_report(csv_rows: list | None = None,
         per_round = (time.perf_counter() - t0) / max(n, 1)
         state = eng.flush(state)
         base = base or per_round
-        print(f"{sync:>10s} {depth:6d} {per_round:9.3f} {n:7d}")
+        tag = f"{sync}_d{depth}" + ("_ring" if wire == "ring-int8" else "")
+        print(f"{sync:>10s} {depth:6d} {wire:>10s} {per_round:9.3f} "
+              f"{n:7d}")
         if csv_rows is not None:
-            csv_rows.append((f"table4_overlap/{sync}_d{depth}/s_per_round",
+            csv_rows.append((f"table4_overlap/{tag}/s_per_round",
                              "", f"{per_round:.4f}"))
         if recs is not None:
-            recs.setdefault("overlap", {})[f"{sync}_d{depth}"] = {
+            recs.setdefault("overlap", {})[tag] = {
                 "s_per_round": per_round, "rounds": n}
-    print(f"overlap/blocking ratio: {per_round / base:.2f}x "
-          "(CPU smoke measurement; on a real mesh the gather leg also "
-          "leaves the critical path)")
+        if tag == "overlap_d1":
+            print(f"overlap/blocking ratio: {per_round / base:.2f}x "
+                  "(CPU smoke measurement; on a real mesh the gather leg "
+                  "also leaves the critical path)")
+        elif tag == "blocking_d0_ring":
+            print(f"ring/blocking ratio: {per_round / base:.2f}x "
+                  "(requantization arithmetic per hop; the wire pays "
+                  "~2.3x fewer bytes — benchmarks/bench_sync_baseline.json)")
 
 
 def observer_report(csv_rows: list | None = None,

@@ -98,3 +98,9 @@ class RunConfig:
     # sync options (beyond-paper)
     sync_quantize: bool = False      # int8-quantized sync deltas
     outer_momentum: float = 0.0      # DiLoCo-style Nesterov outer optimizer
+    # wire mode for the quantized sync payload (README §Wire modes):
+    #   auto     — exact Σq contract; codes travel in wire_dtype(W)
+    #              (int16/int32) so the sum never overflows
+    #   ring-int8 — W-hop re-quantizing ppermute ring; int8 on every hop,
+    #              beyond-exact semantics (drift measured, not assumed)
+    sync_wire: str = "auto"

@@ -45,6 +45,15 @@ Layouts (`make_sync(run_cfg, spec=...)`):
     collectives.  Without a mesh the same state layout runs the flat path
     above on the padded buffers, bitwise-equal to tree/flat.
 
+## Wire modes (README §Wire modes)
+
+`run_cfg.sync_wire` picks what the quantized payload looks like on a wire:
+"auto" keeps the exact Σq contract above (codes travel in `wire_dtype(W)`,
+int16/int32, so the on-wire sum never overflows); "ring-int8" replaces the
+one-shot reduce_scatter with a W-hop re-quantizing `ppermute` ring that
+keeps int8 on every hop at the price of measured (never assumed) per-hop
+requantization noise — see the ring section below.
+
 The two halves are also exposed separately (`make_sync_begin` /
 `make_sync_apply`) so the RoundEngine's `--sync overlap` mode can issue the
 reduce at the round boundary and defer the gather/apply past the first local
@@ -122,10 +131,19 @@ def partial_segment_amax(d, seg, n_segments: int):
                                num_segments=n_segments)
 
 
-def wire_dtype(w: int):
-    """Smallest integer dtype that holds Σ_i q_i exactly for W workers —
-    the RS/AG wire payload type for quantized sharded sync."""
-    return jnp.int16 if w * 127 < 2 ** 15 else jnp.int32
+def wire_dtype(w: int, accum: int | None = None):
+    """Smallest integer dtype that holds the on-wire accumulation of int8
+    codes exactly — the RS/AG payload type for quantized sharded sync.
+
+    `accum` is the number of codes summed *at once on the wire*: the one-shot
+    reduce_scatter folds all W workers in one collective (accum=W, the
+    default), so the payload must hold Σq = ±W·127; the re-quantizing ring
+    (`--wire ring-int8`) never sums on the wire — each hop carries one freshly
+    quantized partial MEAN (accum=1), so int8 always suffices mid-hop."""
+    accum = w if accum is None else accum
+    if accum <= 1:
+        return jnp.int8
+    return jnp.int16 if accum * 127 < 2 ** 15 else jnp.int32
 
 
 # --------------------------------------------------------------------------
@@ -242,6 +260,203 @@ def _ag_codes(spec, qs):
     return {b: out[b][0] for b in out}
 
 
+# --------------------------------------------------------------------------
+# The re-quantizing int8 ring (`--wire ring-int8`)
+# --------------------------------------------------------------------------
+#
+# The exact Σq contract forces wire_dtype(W) — int16/int32 — onto the
+# reduce_scatter: partial sums of int8 codes overflow int8.  The ring mode
+# drops the exact-sum contract instead: the W-hop ppermute ring maintains the
+# running partial MEAN, whose magnitude never exceeds the largest
+# contributor's delta, and re-quantizes it to int8 with a fresh shard-local
+# scalar scale at every hop — int8 payload on every wire, 2-4x fewer bytes.
+# The price is per-hop requantization noise (at most half a level, scale/254,
+# per hop); it is MEASURED, not assumed: benchmarks/sde_drift.py runs the
+# exact-vs-ring A/B and launch/autotune.py records the drift next to the
+# bytes.  Cross-layout/cross-process claims are therefore tolerance-based
+# (`ring_tolerance`), never bitwise — deliberately beyond-exact semantics.
+
+WIRE_MODES = ("auto", "ring-int8")
+
+
+def check_wire(run_cfg) -> str:
+    """Validate + return the wire mode.  ring-int8 rides the quantized sync
+    machinery (codes + anchor), so it requires sync_quantize."""
+    wire = getattr(run_cfg, "sync_wire", "auto")
+    if wire not in WIRE_MODES:
+        raise ValueError(f"unknown sync_wire {wire!r}; pick from {WIRE_MODES}")
+    if wire == "ring-int8" and not run_cfg.sync_quantize:
+        raise ValueError("sync_wire='ring-int8' requires sync_quantize=True "
+                         "(the ring carries int8 codes of the delta)")
+    return wire
+
+
+def ring_tolerance(w: int, amax, rounds: int = 1):
+    """Worst-case |ring mean - exact mean| bound after `rounds` syncs whose
+    per-tensor delta amax never exceeded `amax`.
+
+    Per sync: hop k's requantization errs at most s_k/254 <= amax/254 per
+    element, attenuated by the remaining mean folds to k/W of that at the
+    end; summed over hops plus the final (gather-leg) quantize:
+        err <= amax/254 * (Σ_{k=1..W-1} k/W + 1) = amax/254 * (W+1)/2
+    Errors across rounds add at most linearly (each round's params feed the
+    next delta).  A 2x safety factor absorbs the f32 rounding of the
+    fold itself."""
+    return float(amax) * (w + 1) / 254.0 * rounds * 2.0
+
+
+def _linear_worker_index(mesh, axes: tuple[str, ...]):
+    """Traced linear index of this device along the worker axes, row-major
+    over the tuple — matching how `ppermute` linearizes multi-axis names."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _ring_quantized_begin(spec, params, anchor):
+    """The int8 ring reduce, all dtype buckets in ONE shard_map.
+
+    Per device the bucket block [1, n_loc] splits into W contiguous
+    sub-chunks; worker j seeds the partial destined for worker (j-1) mod W
+    and the ring rotates W-1 times, each hop carrying ONE freshly int8-
+    quantized partial mean + its f32 scalar scale (jax.lax.ppermute over the
+    worker axes — `hlo_analysis` sees W-1 s8 collective-permutes per bucket
+    and zero int16/int32 payloads).  The arriving partial is dequantized and
+    folded with the local sub-chunk by the fused per-hop requant pass
+    (kernels `ring_combine` / `ring_quantize_codes`).  After the last hop
+    worker j owns the full W-mean of sub-chunk j, quantized one final time
+    for the (deferrable) int8 all_gather leg.
+
+    Returns pending {"q": {bucket: [W, N/W] int8 mean codes},
+    "scale": {bucket: [W, S] f32 per-chunk scales}} — unlike the exact path
+    the codes already ARE the mean (no /W at apply time) and the scales are
+    per ring chunk, not per tensor."""
+    from repro.models.common import shard_map_compat
+
+    wt, st = _axt(spec.worker_axes), _axt(spec.shard_axes)
+    buckets = spec.buckets
+    w = jax.tree.leaves(params)[0].shape[0]
+    perm = [(j, (j + 1) % w) for j in range(w)]
+    waxes = spec.worker_axes
+
+    def body(p, a):
+        i = _linear_worker_index(spec.mesh, waxes)
+        qs, ss = {}, {}
+        for b in buckets:
+            d = p[b].astype(jnp.float32) - a[b].astype(jnp.float32)[None]
+            n_loc = d.shape[1]
+            assert n_loc % w == 0, (b, n_loc, w)  # spec pads to W*S chunks
+            dc = d[0].reshape(w, n_loc // w)
+            # seed: the partial destined for worker (i-1) mod W
+            acc = jnp.take(dc, (i - 1) % w, axis=0)
+            s = _guarded_scale(jnp.max(jnp.abs(acc)))
+            q = kops.ring_quantize_codes(acc, s)
+            for k in range(1, w):
+                q = jax.lax.ppermute(q, waxes, perm)
+                s = jax.lax.ppermute(s, waxes, perm)
+                acc, amax = kops.ring_combine(
+                    q, s, jnp.take(dc, (i - 1 - k) % w, axis=0), k)
+                s = _guarded_scale(amax)
+                q = kops.ring_quantize_codes(acc, s)
+            qs[b] = q[None]
+            ss[b] = jnp.reshape(s, (1, 1))
+        return qs, ss
+
+    in_specs = ({b: P(wt, st) for b in buckets},
+                {b: P(st) for b in buckets})
+    out_specs = ({b: P(wt, st) for b in buckets},
+                 {b: P(wt, st) for b in buckets})
+    qs, ss = shard_map_compat(body, spec.mesh, in_specs=in_specs,
+                              out_specs=out_specs)(params, anchor)
+    return {"q": qs, "scale": ss}
+
+
+def _ag_ring(spec, pending):
+    """Gather leg of the ring sync: ONE int8 all_gather per bucket brings
+    every worker's mean sub-chunk (and its scalar scale) to all workers;
+    codes are spread back to per-element scales locally — nothing but int8
+    payloads and scalar-sized f32 scales ever cross a wire.  Returns
+    (step_in {bucket: [N] f32 mean codes}, scales {bucket: [N] f32})."""
+    from repro.models.common import shard_map_compat
+
+    wt, st = _axt(spec.worker_axes), _axt(spec.shard_axes)
+    buckets = list(pending["q"])
+
+    def body(qs, ss):
+        step, scl = {}, {}
+        for b in buckets:
+            qg = jax.lax.all_gather(qs[b], spec.worker_axes, axis=1,
+                                    tiled=True)              # [1, n_loc] s8
+            sg = jax.lax.all_gather(ss[b], spec.worker_axes, axis=1,
+                                    tiled=True)              # [1, W] f32
+            w = sg.shape[1]
+            step[b] = qg.astype(jnp.float32)
+            scl[b] = jnp.repeat(sg[0], qg.shape[1] // w)[None]
+        return step, scl
+
+    in_specs = ({b: P(wt, st) for b in buckets},
+                {b: P(wt, st) for b in buckets})
+    out_specs = ({b: P(None, st) for b in buckets},
+                 {b: P(None, st) for b in buckets})
+    step, scl = shard_map_compat(body, spec.mesh, in_specs=in_specs,
+                                 out_specs=out_specs)(pending["q"],
+                                                      pending["scale"])
+    return ({b: step[b][0] for b in buckets}, {b: scl[b][0] for b in buckets})
+
+
+def ring_codes_host(d, w: int | None = None):
+    """Mesh-less emulation of the int8 ring over one bucket delta d [W, N]
+    (S=1 chunking), identical per-hop arithmetic to `_ring_quantized_begin`:
+    chunk c's partial seeds at worker (c+1) mod W and folds each visitor's
+    contribution through the same fused requant pass.  Returns
+    (q [W, ceil(N/W)] int8 mean codes, s [W] f32 per-chunk scales) — the
+    host reference the drift A/B (benchmarks/sde_drift.py) and the multihost
+    tolerance assertions run against."""
+    w = d.shape[0] if w is None else w
+    n = d.shape[1]
+    pad = (-n) % w
+    if pad:
+        d = jnp.pad(d, ((0, 0), (0, pad)))  # zero delta: exact under requant
+    dc = d.reshape(w, w, d.shape[1] // w)   # [worker, chunk, chunk_len]
+    qs, ss = [], []
+    for c in range(w):
+        j0 = (c + 1) % w
+        acc = dc[j0, c]
+        s = _guarded_scale(jnp.max(jnp.abs(acc)))
+        q = kops.ring_quantize_codes(acc, s)
+        for k in range(1, w):
+            acc, amax = kops.ring_combine(q, s, dc[(j0 + k) % w, c], k)
+            s = _guarded_scale(amax)
+            q = kops.ring_quantize_codes(acc, s)
+        qs.append(q)
+        ss.append(s)
+    return jnp.stack(qs), jnp.stack(ss)
+
+
+def _ring_host_begin(spec, params, anchor):
+    """Mesh-less ring pending for the flat layouts: per bucket
+    {"q": [W, C] int8, "scale": [W] f32} with C = ceil(N/W)."""
+    out_q, out_s = {}, {}
+    for b in spec.buckets:
+        d = (params[b].astype(jnp.float32)
+             - anchor[b].astype(jnp.float32)[None])
+        out_q[b], out_s[b] = ring_codes_host(d)
+    return {"q": out_q, "scale": out_s}
+
+
+def _ring_host_gather(pending, anchor):
+    """Flatten mesh-less ring pending back to per-element (step_in, scales)
+    matching `_ag_ring`'s output — same fused apply path either way."""
+    step, scl = {}, {}
+    for b in pending["q"]:
+        q, s = pending["q"][b], pending["scale"][b]
+        n = anchor[b].shape[0]
+        step[b] = q.reshape(-1)[:n].astype(jnp.float32)
+        scl[b] = jnp.repeat(s, q.shape[1])[:n]
+    return step, scl
+
+
 def pending_specs(run_cfg, spec):
     """PartitionSpec tree of the pending sync (`make_sync_begin`'s output)
     under a mesh-carrying ShardedFlatSpace — what a program that *threads*
@@ -252,10 +467,14 @@ def pending_specs(run_cfg, spec):
     owns the 1/W sub-chunk of its shard it reduced, so payloads sit at
     [W, N/W] over (worker_axes, shard_axes).  Quantized pending carries the
     integer code-sums at that sharding plus the per-element scales, which
-    are shard-local only ([N] over shard_axes)."""
+    are shard-local only ([N] over shard_axes).  Ring pending differs: the
+    scales are per ring chunk — one scalar per (worker, shard) device — so
+    they share the payload's (worker_axes, shard_axes) sharding."""
     wt, st = _axt(spec.worker_axes), _axt(spec.shard_axes)
     payload = {b: P(wt, st) for b in spec.buckets}
     if run_cfg.sync_quantize:
+        if check_wire(run_cfg) == "ring-int8":
+            return {"q": payload, "scale": dict(payload)}
         return {"q": payload, "scale": {b: P(st) for b in spec.buckets}}
     return payload
 
@@ -274,7 +493,12 @@ def make_sync_begin(run_cfg, spec=None):
     in make_sync_apply (the deferrable leg)."""
     quantize = run_cfg.sync_quantize
     mom = run_cfg.outer_momentum
+    wire = check_wire(run_cfg)
     coll = _use_collectives(spec)
+    if wire == "ring-int8" and spec is None:
+        raise ValueError("sync_wire='ring-int8' needs a flat layout "
+                         "(--param-layout flat | flat_sharded): the ring "
+                         "chunks a bucket, not a pytree leaf")
 
     def mean_w(x):
         return _rs_mean(spec, x, x.shape[0]) if coll else jnp.mean(x, axis=0)
@@ -285,6 +509,9 @@ def make_sync_begin(run_cfg, spec=None):
             return jax.tree.map(
                 lambda p: mean_w(p.astype(jnp.float32)), params)
         anchor = state["anchor"]
+        if wire == "ring-int8":
+            return (_ring_quantized_begin(spec, params, anchor) if coll
+                    else _ring_host_begin(spec, params, anchor))
         if quantize and coll:
             return _rs_quantized_begin(spec, params, anchor)
         delta = jax.tree.map(
@@ -326,6 +553,7 @@ def make_sync_apply(run_cfg, spec=None):
     kernels/sync_update.py `sync_apply_update` pass per bucket)."""
     quantize = run_cfg.sync_quantize
     mom = run_cfg.outer_momentum
+    wire = check_wire(run_cfg)
     coll = _use_collectives(spec)
 
     def gather(x):
@@ -350,14 +578,20 @@ def make_sync_apply(run_cfg, spec=None):
             return {**state, "params": to_params(mean, params, entry_params)}
         new_state = dict(state)
         if quantize:
-            if coll:
+            if wire == "ring-int8":
+                # the ring already holds the MEAN (no /W); scales arrive per
+                # ring chunk and spread to elements with the gather
+                step_in, scales = (_ag_ring(spec, pending) if coll else
+                                   _ring_host_gather(pending, state["anchor"]))
+            elif coll:
                 w = jax.tree.leaves(params)[0].shape[0]
                 qmean = {b: q.astype(jnp.float32) / w
                          for b, q in _ag_codes(spec, pending["q"]).items()}
+                scales = pending["scale"]
+                step_in = qmean
             else:
-                qmean = pending["q"]
-            scales = pending["scale"]
-            step_in = qmean
+                step_in = pending["q"]
+                scales = pending["scale"]
         else:
             step_in = jax.tree.map(gather, pending)
             scales = None
@@ -403,8 +637,9 @@ def make_sync(run_cfg, spec=None):
     A mesh-less flat spec runs the one-pass fused kernel instead."""
     quantize = run_cfg.sync_quantize
     mom = run_cfg.outer_momentum
+    wire = check_wire(run_cfg)
 
-    if spec is not None and not _use_collectives(spec):
+    if spec is not None and not _use_collectives(spec) and wire != "ring-int8":
         def sync_flat(state):
             params = state["params"]
             if not quantize and mom == 0.0:

@@ -93,6 +93,25 @@ def sync_apply_update(step_in, anchor, *, scale=None, mu=None,
                                 interpret=(_BACKEND == "interpret"))
 
 
+def ring_combine(q, s, x, k: int):
+    """One receive hop of the re-quantizing int8 ring: dequantize incoming
+    codes, fold the local chunk into the running mean, emit the next hop's
+    amax — fused (kernels/sync_update.py). Returns (acc, amax)."""
+    if _BACKEND == "jnp":
+        return ref.ring_combine(q, s, x, k)
+    from repro.kernels import sync_update as _k
+    return _k.ring_combine(q, s, x, k, interpret=(_BACKEND == "interpret"))
+
+
+def ring_quantize_codes(acc, scale):
+    """Send-side half of the per-hop requant pass: int8 codes of a ring
+    partial mean under one guarded scalar scale."""
+    if _BACKEND == "jnp":
+        return ref.ring_quantize_codes(acc, scale)
+    from repro.kernels import sync_update as _k
+    return _k.ring_quantize(acc, scale, interpret=(_BACKEND == "interpret"))
+
+
 def swiglu(x, wg, wi):
     """Fused silu(x@wg)*(x@wi) — the MLP hot spot."""
     if _BACKEND == "jnp":

@@ -143,6 +143,33 @@ def sync_apply_update(step_in, anchor, *, scale=None, mu=None, momentum=0.0):
     return new_anchor, new_mu
 
 
+def ring_combine(q, s, x, k):
+    """One receive hop of the re-quantizing int8 ring (core/sync.py
+    `--wire ring-int8`).
+
+    q [n] int8 codes of the incoming partial mean over k contributors, s ()
+    the sender's (guarded) scalar scale, x [n] this worker's own chunk of
+    the delta.  Folds the local contribution into the running MEAN —
+    acc = (k * dequant(q, s) + x) / (k + 1) — whose magnitude never exceeds
+    the largest contributor's, so int8 always holds the next hop's codes.
+    Returns (acc [n] f32, amax ()) with amax = max|acc|, the statistic the
+    next hop's fresh shard-local scale is guarded from.
+    """
+    deq = q.astype(jnp.float32) * (s / 127.0)
+    acc = (jnp.float32(k) * deq + x.astype(jnp.float32)) / jnp.float32(k + 1)
+    return acc, jnp.max(jnp.abs(acc))
+
+
+def ring_quantize_codes(acc, scale):
+    """int8 wire codes of a ring partial mean under ONE (guarded) scalar
+    scale: clip(round(acc/scale*127)) ∈ [-127, 127], stored as int8 — the
+    only payload dtype the ring ever puts on a wire.  Round-trip error is at
+    most half a level (scale/254) per hop; tests/test_quantize_props.py
+    bounds the K-hop accumulation."""
+    return jnp.clip(jnp.round(acc / scale * 127.0),
+                    -127.0, 127.0).astype(jnp.int8)
+
+
 def swiglu(x, wg, wi):
     """silu(x @ wg) * (x @ wi) in fp32, cast back to x.dtype."""
     xf = x.astype(jnp.float32)

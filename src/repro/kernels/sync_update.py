@@ -150,3 +150,69 @@ def sync_apply_update(step_in, anchor, *, scale=None, mu=None,
     new_a = out[0][:n]
     new_mu = out[1][:n] if momentum > 0.0 else None
     return new_a, new_mu
+
+
+# --------------------------------------------------------------------------
+# The per-hop requant pass of the int8 ring (core/sync.py --wire ring-int8)
+# --------------------------------------------------------------------------
+
+def _ring_combine_kernel(q_ref, s_ref, x_ref, acc_ref, am_ref, *, k):
+    deq = q_ref[...].astype(jnp.float32) * (s_ref[...] / 127.0)
+    acc = (jnp.float32(k) * deq + x_ref[...].astype(jnp.float32)) \
+        / jnp.float32(k + 1)
+    acc_ref[...] = acc
+    am_ref[...] = jnp.max(jnp.abs(acc))[None]
+
+
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def ring_combine(q, s, x, k: int, interpret: bool = False):
+    """One receive hop of the re-quantizing ring, fused: dequantize the
+    incoming int8 codes, fold the local chunk into the running mean, and
+    emit the amax the next hop's scale needs — one VMEM pass instead of the
+    dequant/mul/add/div/abs/max chain (see kernels/ref.py oracle).
+
+    q [n] int8; s () f32 sender scale; x [n] local chunk.  Returns
+    (acc [n] f32, amax () f32)."""
+    (n,) = q.shape
+    blk = min(n, _BLOCK)
+    pad = (-n) % blk
+    # pad codes/chunk with zeros: the padded lanes contribute 0 to acc and
+    # |0| to the amax fold — both identities
+    qq = jnp.pad(q, (0, pad))
+    xx = jnp.pad(x, (0, pad))
+    grid = (n + pad) // blk
+    spec1 = pl.BlockSpec((blk,), lambda i: (i,))
+    spec_s = pl.BlockSpec((1,), lambda i: (0,))
+    out = pl.pallas_call(
+        partial(_ring_combine_kernel, k=k), grid=(grid,),
+        in_specs=[spec1, spec_s, spec1],
+        out_specs=[spec1, pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+                   jax.ShapeDtypeStruct((grid,), jnp.float32)],
+        interpret=interpret)(qq, jnp.reshape(s, (1,)).astype(jnp.float32), xx)
+    return out[0][:n], jnp.max(out[1])
+
+
+def _ring_quantize_kernel(acc_ref, s_ref, q_ref):
+    q_ref[...] = jnp.clip(jnp.round(acc_ref[...] / s_ref[...] * 127.0),
+                          -127.0, 127.0).astype(jnp.int8)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ring_quantize(acc, scale, interpret: bool = False):
+    """int8 wire codes of a ring partial mean under one guarded scalar
+    scale — the send-side half of the per-hop requant pass.  acc [n] f32,
+    scale () f32 (already guarded > 0).  Returns q [n] int8."""
+    (n,) = acc.shape
+    blk = min(n, _BLOCK)
+    pad = (-n) % blk
+    aa = jnp.pad(acc, (0, pad))
+    spec1 = pl.BlockSpec((blk,), lambda i: (i,))
+    spec_s = pl.BlockSpec((1,), lambda i: (0,))
+    out = pl.pallas_call(
+        _ring_quantize_kernel, grid=((n + pad) // blk,),
+        in_specs=[spec1, spec_s],
+        out_specs=spec1,
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.int8),
+        interpret=interpret)(aa, jnp.reshape(scale, (1,)).astype(jnp.float32))
+    return out[:n]

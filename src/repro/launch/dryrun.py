@@ -28,10 +28,13 @@ from repro.launch.shapes import SHAPES, build_case
 def run_one(arch, shape, *, multi_pod, policy=None,
             parallel_baseline=False, run_cfg=None,
             engine="legacy", layout="tree", sync="blocking",
-            overlap_depth=0, verbose=True):
+            overlap_depth=0, quantize=False, wire="auto", verbose=True):
     from repro.configs import registry as R
 
     policy = policy or R.get_policy(arch)
+    if run_cfg is None and (quantize or wire != "auto"):
+        run_cfg = RunConfig(sharding=policy, sync_wire=wire,
+                            sync_quantize=quantize or wire == "ring-int8")
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
     case = build_case(arch, shape, mesh, policy=policy,
@@ -56,6 +59,8 @@ def run_one(arch, shape, *, multi_pod, policy=None,
         "hp": case.meta.get("hp"),
         "layout": case.meta.get("layout", "tree"),
         "sync": case.meta.get("sync", "blocking"),
+        "quantize": bool(run_cfg.sync_quantize) if run_cfg else False,
+        "wire": getattr(run_cfg, "sync_wire", "auto") if run_cfg else "auto",
         "overlap_depth": case.meta.get("overlap_depth"),
         "pending_leaves": case.meta.get("pending_leaves"),
         "ring": case.meta.get("ring"),
@@ -108,6 +113,15 @@ def main() -> None:
     ap.add_argument("--overlap-depth", type=int, default=0,
                     help="local steps lowered before the deferred "
                          "gather/apply (--sync overlap)")
+    ap.add_argument("--quantize", action="store_true",
+                    help="lower the int8-quantized sync (integer-code "
+                         "payloads on the RS/AG legs + one tiny amax pmax)")
+    ap.add_argument("--wire", default="auto", choices=["auto", "ring-int8"],
+                    help="quantized payload wire mode (README §Wire modes); "
+                         "ring-int8 lowers the W-hop re-quantizing ppermute "
+                         "ring — collective_counts shows the s8 "
+                         "collective-permutes (implies --quantize; needs "
+                         "--param-layout flat_sharded)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -129,7 +143,9 @@ def main() -> None:
                                            engine=args.engine,
                                            layout=args.param_layout,
                                            sync=args.sync,
-                                           overlap_depth=args.overlap_depth))
+                                           overlap_depth=args.overlap_depth,
+                                           quantize=args.quantize,
+                                           wire=args.wire))
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     failures.append({"arch": arch, "shape": shape,

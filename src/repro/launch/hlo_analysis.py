@@ -61,12 +61,14 @@ def _crosses_pod(line: str, pod_size: int) -> bool | None:
 
 
 def _iter_collectives(hlo_text: str):
-    """Yield (kind, line, nbytes_full, nbytes_result) for every collective
-    op in the optimized HLO, with start/done pairs reported once (on the
-    -start line).  nbytes_result sums the *result* type(s) only — for
-    reduce-scatter that is the per-device owned chunk (the scatter leg);
+    """Yield (kind, line, nbytes_full, nbytes_result, dtype) for every
+    collective op in the optimized HLO, with start/done pairs reported once
+    (on the -start line).  nbytes_result sums the *result* type(s) only —
+    for reduce-scatter that is the per-device owned chunk (the scatter leg);
     nbytes_full takes the larger of (result, operands) — the full-tensor
-    roofline size for gather/scatter ops."""
+    roofline size for gather/scatter ops.  `dtype` is the first result
+    element type (s8/s16/f32/...): the wire payload classifier — how
+    tests prove the ring sync keeps int8 on every collective-permute hop."""
     for line in hlo_text.splitlines():
         s = line.strip()
         m = re.match(r"%?[\w\.\-]+\s*=\s*(.*)$", s)
@@ -92,7 +94,7 @@ def _iter_collectives(hlo_text: str):
         oshapes = _SHAPE_RE.findall(tail)
         nb = lambda sh: sum(_shape_bytes(dt, dims) for dt, dims in sh)
         res = nb(rshapes)
-        yield kind, line, max(res, nb(oshapes)), res
+        yield kind, line, max(res, nb(oshapes)), res, rshapes[0][0]
 
 
 def collective_bytes(hlo_text: str, pod_size: int = 0) -> dict[str, int]:
@@ -108,7 +110,7 @@ def collective_bytes(hlo_text: str, pod_size: int = 0) -> dict[str, int]:
     """
     out = {k: 0 for k in _COLLECTIVES}
     out["dci"] = 0  # pod-crossing bytes (multi-pod meshes only)
-    for kind, line, nbytes, _ in _iter_collectives(hlo_text):
+    for kind, line, nbytes, _, _ in _iter_collectives(hlo_text):
         out[kind] += nbytes
         if pod_size and _crosses_pod(line, pod_size):
             out["dci"] += nbytes
@@ -123,20 +125,23 @@ def collective_result_bytes(hlo_text: str) -> dict[str, int]:
     all_gather (result: the full bucket) is the leg `--sync overlap` hides
     behind the next round's first local steps."""
     out = {k: 0 for k in _COLLECTIVES}
-    for kind, _, _, res in _iter_collectives(hlo_text):
+    for kind, _, _, res, _ in _iter_collectives(hlo_text):
         out[kind] += res
     return out
 
 
 def collective_ops(hlo_text: str) -> list[dict]:
-    """Per-op collective detail: [{kind, bytes_full, bytes_result}] in HLO
-    order.  This is the view that separates a *scale* collective from a
-    *payload* collective: the quantized sharded sync's amax fold is one
+    """Per-op collective detail: [{kind, bytes_full, bytes_result, dtype}]
+    in HLO order.  This is the view that separates a *scale* collective from
+    a *payload* collective: the quantized sharded sync's amax fold is one
     all-reduce of 4 bytes per model tensor (launch/sync_compare classifies
     any all-reduce at most that size as the fold; a bucket-sized all-reduce
-    would be a lowering regression)."""
-    return [{"kind": kind, "bytes_full": full, "bytes_result": res}
-            for kind, _, full, res in _iter_collectives(hlo_text)]
+    would be a lowering regression).  `dtype` is the result element type —
+    the ring sync's acceptance proof filters payload-sized ops and asserts
+    every one is s8 (launch/sync_compare `payload_bytes_by_dtype`)."""
+    return [{"kind": kind, "bytes_full": full, "bytes_result": res,
+             "dtype": dtype}
+            for kind, _, full, res, dtype in _iter_collectives(hlo_text)]
 
 
 def collective_counts(hlo_text: str) -> dict[str, int]:
@@ -151,7 +156,7 @@ def collective_counts(hlo_text: str) -> dict[str, int]:
     tests/test_sharded.py).
     """
     out = {k: 0 for k in _COLLECTIVES}
-    for kind, _, _, _ in _iter_collectives(hlo_text):
+    for kind, _, _, _, _ in _iter_collectives(hlo_text):
         out[kind] += 1
     return out
 

@@ -22,6 +22,17 @@ Two jobs:
    additionally checks the multi-process digests against a single-process
    8-simulated-device run of this same module.
 
+   `--wire ring-int8` swaps the one-shot reduce_scatter for the W-hop
+   re-quantizing int8 ppermute ring (core/sync.py §ring).  The ring is
+   deliberately beyond-exact: per-hop requantization makes the mesh path
+   differ from the host reference (and, at the engine's overlap seam, XLA's
+   refusion across the program boundary can flip a requant code), so ring
+   runs are asserted within `ring_tolerance` — never bitwise.  The shard
+   hashes stay exact across PROCESS SPLITS though: the ring has no
+   cross-device reductions at all (each hop's arithmetic is device-local and
+   ppermute moves int8 bytes verbatim), so a 1-process and an N-process run
+   of the same mesh still hash identically shard for shard.
+
 Spawn it yourself (the multihost CPU runbook, README §Multihost):
 
   PYTHONPATH=src python -m repro.launch.multihost \
@@ -148,7 +159,8 @@ def _shard_hashes(tag: str, arr) -> dict:
 
 def run_sync(*, mesh: str = "2x2x2", policy: str = "fsdp",
              quantize: bool = True, momentum: float = 0.0,
-             overlap: bool = False, rounds: int = 3, seed: int = 0) -> dict:
+             overlap: bool = False, rounds: int = 3, seed: int = 0,
+             wire: str = "auto") -> dict:
     """Execute `rounds` sharded syncs on the global mesh — across however
     many processes own its devices — and assert every addressable shard
     bitwise-equal to the process-local host-path reference (the mesh-less
@@ -162,20 +174,25 @@ def run_sync(*, mesh: str = "2x2x2", policy: str = "fsdp",
 
     Bitwise holds for any mesh when `quantize` (integer-code mean) and for
     2-worker meshes unquantized (a single f32 addition has one order);
-    callers pick configurations accordingly (tests/test_multihost.py)."""
+    callers pick configurations accordingly (tests/test_multihost.py).
+    wire="ring-int8" relaxes the contract: the mesh ring and the host ring
+    fold identical math through different XLA programs, so requant codes can
+    flip — shards must land within `ring_tolerance` of the reference
+    instead (the module docstring's beyond-exact semantics)."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.configs.base import RunConfig
     from repro.core import flat as F
-    from repro.core.sync import make_sync, make_sync_apply, make_sync_begin
+    from repro.core.sync import (make_sync, make_sync_apply, make_sync_begin,
+                                 ring_tolerance)
     from repro.models import param as pm
 
     dims, axes = _parse_mesh(mesh)
     jmesh = jax.make_mesh(dims, axes)
     run_cfg = RunConfig(sharding=policy, sync_quantize=quantize,
-                        outer_momentum=momentum)
+                        outer_momentum=momentum, sync_wire=wire)
     w = pm.worker_count(policy, jmesh)
     waxes = pm.worker_mesh_axes(policy, jmesh)
     saxes = tuple(a for a in jmesh.axis_names if a not in waxes)
@@ -240,24 +257,43 @@ def run_sync(*, mesh: str = "2x2x2", policy: str = "fsdp",
         st_m, st_h = apply_m(st_m, pend_m), apply_h(st_h, pend_h)
 
     # every addressable shard of the distributed state must equal the
-    # corresponding slice of the (fully-replicated) host reference
-    max_diff, hashes = 0.0, {}
+    # corresponding slice of the (fully-replicated) host reference.  For the
+    # ring wire the comparison is tolerance-based AFTER a per-element cast
+    # allowance |ref|*eps(dtype)*rounds: each round's anchor cast can put
+    # the two paths one output-dtype quantum apart (a straddled bf16
+    # rounding boundary), and that divergence re-enters the next round's
+    # delta — up to one quantum PER ROUND on bf16 buckets.
+    max_diff, excess, hashes = 0.0, 0.0, {}
     for k in sorted(st_h):
         for b in sorted(st_h[k]):
             ref = np.asarray(st_h[k][b], np.float32)
+            eps = (2.0 ** -7 if "bfloat16" in str(st_h[k][b].dtype)
+                   else 2.0 ** -23) * rounds
             for s in st_m[k][b].addressable_shards:
                 got = np.asarray(s.data, np.float32)
-                max_diff = max(max_diff,
-                               float(np.max(np.abs(got - ref[s.index])))
-                               if got.size else 0.0)
+                if got.size:
+                    d = np.abs(got - ref[s.index])
+                    max_diff = max(max_diff, float(np.max(d)))
+                    excess = max(excess, float(
+                        np.max(d - np.abs(ref[s.index]) * eps)))
             hashes.update(_shard_hashes(f"{k}/{b}", st_m[k][b]))
 
     info = runtime_info()
-    ok = max_diff == 0.0
+    if wire == "ring-int8":
+        # every round's delta-from-anchor is exactly that round's noise
+        # (post-sync params == anchor), so the noise amax bounds the ring's
+        # per-round requantization error
+        amax_d = max(float(np.max(np.abs(v)))
+                     for nz in noises for v in nz.values())
+        tol = ring_tolerance(w, amax_d, rounds)
+        ok = excess <= tol
+    else:
+        tol = 0.0
+        ok = max_diff == 0.0
     # the digest is over the host reference — meaningful ONLY because the
-    # shard assertions above tie the distributed state to it bitwise, so
-    # gate it on `ok`: a broken distributed path can never produce a
-    # matching digest
+    # shard assertions above tie the distributed state to it (bitwise, or
+    # within ring_tolerance for the ring wire), so gate it on `ok`: a broken
+    # distributed path can never produce a matching digest
     digest = (_digest([st_h[k][b] for k in sorted(st_h)
                        for b in sorted(st_h[k])])
               if ok else f"MISMATCH:{max_diff:.3e}")
@@ -267,9 +303,10 @@ def run_sync(*, mesh: str = "2x2x2", policy: str = "fsdp",
         "shard_hashes": hashes,
         "mesh": mesh, "policy": policy, "workers": w, "shards": shards,
         "quantize": quantize, "momentum": momentum, "overlap": overlap,
-        "rounds": rounds, "wire_dtype": ("int16" if quantize and
-                                         w * 127 < 2 ** 15 else
-                                         "int32" if quantize else "float32"),
+        "rounds": rounds, "wire": wire, "ring_tol": tol,
+        "wire_dtype": ("int8" if wire == "ring-int8" else
+                       "int16" if quantize and w * 127 < 2 ** 15 else
+                       "int32" if quantize else "float32"),
         **info,
     }
 
@@ -278,7 +315,7 @@ def run_engine(*, mesh: str = "2x2x2", policy: str = "fsdp",
                quantize: bool = True, momentum: float = 0.0,
                rounds: int = 2, seed: int = 0,
                arch: str = "starcoder2-3b", sync: str = "blocking",
-               overlap_depth: int = 0) -> dict:
+               overlap_depth: int = 0, wire: str = "auto") -> dict:
     """Execute full RoundEngine communication rounds (local steps + sharded
     sync) on the global mesh, across real process boundaries: the engine is
     built exactly as single-process — same config, same mesh axes — with
@@ -300,7 +337,13 @@ def run_engine(*, mesh: str = "2x2x2", policy: str = "fsdp",
     match it BITWISE, shard for shard, on any mesh/process split (identical
     op sequence, deterministic collectives — tests/test_sharded.py proves
     the host edition).  Depth > 0 is the correction form: finite and close,
-    reported but not asserted bitwise."""
+    reported but not asserted bitwise.
+
+    wire="ring-int8" weakens the depth-0 contract to tolerance: splitting
+    begin/apply across the program boundary changes how XLA fuses the ring's
+    f32 hop arithmetic, and a reassociated rounding can flip a requant code
+    — one quantization level, bounded per round by `ring_tolerance` of the
+    (h·lr)-bounded local-step delta."""
     import jax
     import numpy as np
 
@@ -308,6 +351,7 @@ def run_engine(*, mesh: str = "2x2x2", policy: str = "fsdp",
     from repro.configs.base import RunConfig
     from repro.core import schedules
     from repro.core.engine import RoundEngine
+    from repro.core.sync import ring_tolerance
     from repro.optim.lr import make_lr_fn
     from repro.models import param as pm
 
@@ -318,7 +362,8 @@ def run_engine(*, mesh: str = "2x2x2", policy: str = "fsdp",
                         total_steps=2 * rounds, peak_lr=3e-3, end_lr=1e-6,
                         warmup_steps=1, h_base=2, alpha=0.001, remat=False,
                         weight_decay=0.01, sync_quantize=quantize,
-                        outer_momentum=momentum, sharding=policy)
+                        outer_momentum=momentum, sharding=policy,
+                        sync_wire=wire)
     w = pm.worker_count(policy, jmesh)
     mk = lambda s, d: RoundEngine(cfg, run_cfg, workers=w, b_loc=2, seq=16,
                                   seed=seed, data="device",
@@ -330,9 +375,15 @@ def run_engine(*, mesh: str = "2x2x2", policy: str = "fsdp",
     state = eng.init_state()
     ref_state = ref.init_state() if ref else None
     losses, ref_losses = [], []
+    tol = 0.0
     for t, h in schedules.rounds(run_cfg, lr_fn):
         state, m = eng.run_round(state, t, h, lr_fn)
         losses.append(float(m["loss"]))
+        if wire == "ring-int8":
+            # per-round delta amax bound: h AdamW steps of normalized-update
+            # magnitude <= ~lr each, x4 headroom for bias-corrected early
+            # steps + weight decay — feeds the per-round requant error bound
+            tol += ring_tolerance(w, 4.0 * h * run_cfg.peak_lr, 1)
         if ref:
             ref_state, mr = ref.run_round(ref_state, t, h, lr_fn)
             ref_losses.append(float(mr["loss"]))
@@ -350,29 +401,38 @@ def run_engine(*, mesh: str = "2x2x2", policy: str = "fsdp",
     ok = all(np.isfinite(losses))
     rec = {}
     if ref:
-        max_diff = 0.0
+        max_diff, excess = 0.0, 0.0
         for k in ("params", "anchor"):
             if k in state:
                 for b in state[k]:
+                    eps = (2.0 ** -7 if "bfloat16" in str(state[k][b].dtype)
+                           else 2.0 ** -23) * max(len(losses), 1)
                     for s, r in zip(state[k][b].addressable_shards,
                                     ref_state[k][b].addressable_shards):
                         a = np.asarray(s.data, np.float32)
                         bb = np.asarray(r.data, np.float32)
                         if a.size:
-                            max_diff = max(max_diff,
-                                           float(np.max(np.abs(a - bb))))
-        matches = max_diff == 0.0
+                            d = np.abs(a - bb)
+                            max_diff = max(max_diff, float(np.max(d)))
+                            # ring: allow one output-dtype quantum PER ROUND
+                            # (straddled rounding boundaries re-enter the
+                            # next round's delta) before testing the bound
+                            excess = max(excess, float(
+                                np.max(d - np.abs(bb) * eps)))
+        matches = (excess <= tol if wire == "ring-int8"
+                   else max_diff == 0.0)
         if overlap_depth == 0:
             ok = ok and matches
         rec = {"blocking_losses": ref_losses,
                "overlap_matches_blocking": matches,
-               "max_abs_diff_vs_blocking": max_diff}
+               "max_abs_diff_vs_blocking": max_diff,
+               "wire_tolerance": tol}
     info = runtime_info()
     return {
         "mode": "engine", "ok": ok, "losses": losses,
         "shard_hashes": hashes, "mesh": mesh, "policy": policy, "workers": w,
         "quantize": quantize, "momentum": momentum, "rounds": len(losses),
-        "sync": sync, "overlap_depth": overlap_depth,
+        "sync": sync, "overlap_depth": overlap_depth, "wire": wire,
         "arch": arch, **rec, **info,
     }
 
@@ -462,6 +522,11 @@ def main() -> None:
                          "must equal --total-devices")
     ap.add_argument("--policy", default="fsdp", choices=["dp", "fsdp"])
     ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--wire", default="auto", choices=["auto", "ring-int8"],
+                    help="quantized payload wire mode: 'auto' = exact "
+                         "int16/int32 code-sums (bitwise asserts); "
+                         "'ring-int8' = re-quantizing int8 ppermute ring "
+                         "(tolerance asserts; implies --quantize)")
     ap.add_argument("--momentum", type=float, default=0.0)
     ap.add_argument("--overlap", action="store_true",
                     help="sync mode: split begin/apply across round "
@@ -479,13 +544,16 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--arch", default="starcoder2-3b")
     args = ap.parse_args()
+    if args.wire == "ring-int8":
+        args.quantize = True
 
     if args.spawn:
         extra = ["--mode", args.mode, "--mesh", args.mesh,
                  "--policy", args.policy, "--momentum", str(args.momentum),
                  "--rounds", str(args.rounds), "--seed", str(args.seed),
                  "--arch", args.arch, "--sync", args.sync,
-                 "--overlap-depth", str(args.overlap_depth)]
+                 "--overlap-depth", str(args.overlap_depth),
+                 "--wire", args.wire]
         if args.quantize:
             extra.append("--quantize")
         if args.overlap:
@@ -512,12 +580,13 @@ def main() -> None:
         out = run_engine(mesh=args.mesh, policy=args.policy,
                          quantize=args.quantize, momentum=args.momentum,
                          rounds=args.rounds, seed=args.seed, arch=args.arch,
-                         sync=args.sync, overlap_depth=args.overlap_depth)
+                         sync=args.sync, overlap_depth=args.overlap_depth,
+                         wire=args.wire)
     else:
         out = run_sync(mesh=args.mesh, policy=args.policy,
                        quantize=args.quantize, momentum=args.momentum,
                        overlap=args.overlap, rounds=args.rounds,
-                       seed=args.seed)
+                       seed=args.seed, wire=args.wire)
     print(json.dumps(out))
     sys.exit(0 if out["ok"] else 1)
 

@@ -46,20 +46,23 @@ LAYOUTS = ("tree", "flat", "flat_sharded")
 
 def compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
             quantize: bool = False, momentum: float = 0.0,
+            wire: str = "auto",
             n_data: int = 4, n_model: int = 2, pods: int = 0,
             policy: str = "dp",
             layouts: tuple[str, ...] = LAYOUTS) -> dict:
     """{layout: {collective_counts, collective_bytes, collective_leg_bytes,
     all_reduce_ops, reduce_scatter_ops, all_gather_ops, bytes_on_wire,
-    scatter_leg_bytes, n_leaves, n_buckets}} for the policy's sync."""
+    scatter_leg_bytes, n_leaves, n_buckets, payload_bytes_by_dtype, ...}}
+    for the policy's sync.  wire="ring-int8" swaps the one-shot RS for the
+    re-quantizing ppermute ring (flat layouts only; requires quantize)."""
     from repro.configs import registry as R
 
     cfg = R.get_smoke_config(arch) if smoke else R.get_config(arch)
     run_cfg = RunConfig(sharding=policy, sync_quantize=quantize,
-                        outer_momentum=momentum)
+                        outer_momentum=momentum, sync_wire=wire)
     mesh = make_debug_mesh(n_data, n_model, pods=pods)
     out = {"_config": {"arch": arch, "smoke": smoke, "quantize": quantize,
-                       "momentum": momentum, "policy": policy,
+                       "momentum": momentum, "policy": policy, "wire": wire,
                        "mesh": [d for d in ((pods,) if pods else ())
                                 + (n_data, n_model)]}}
     for layout in layouts:
@@ -81,9 +84,20 @@ def compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
         # size (+ alignment slack) counts as a payload all-reduce.
         n_leaves = case.meta["n_leaves"]
         fold_limit = 4 * n_leaves + 64
-        ars = [op for op in hlo_analysis.collective_ops(hlo)
-               if op["kind"] == "all-reduce"]
+        ops = hlo_analysis.collective_ops(hlo)
+        ars = [op for op in ops if op["kind"] == "all-reduce"]
         fold = [op for op in ars if op["bytes_full"] <= fold_limit]
+        # payload vs scale-sized split across ALL kinds: the ring's per-hop
+        # f32 scales are scalar-sized ppermutes/gathers (4 bytes per hop /
+        # 4*W per gather), classified with the same fold threshold —
+        # everything bigger is wire payload and must carry the wire dtype
+        # (s8 for ring-int8: the acceptance proof)
+        payload = [op for op in ops if op["bytes_full"] > fold_limit]
+        by_dtype_bytes, by_dtype_ops = {}, {}
+        for op in payload:
+            by_dtype_bytes[op["dtype"]] = (by_dtype_bytes.get(op["dtype"], 0)
+                                           + op["bytes_full"])
+            by_dtype_ops[op["dtype"]] = by_dtype_ops.get(op["dtype"], 0) + 1
         out[layout] = {
             "collective_counts": counts,
             "collective_bytes": {k: v for k, v in nbytes.items() if v},
@@ -98,6 +112,10 @@ def compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
             "scatter_leg_bytes": legs["reduce-scatter"],
             "rs_wire_bytes": nbytes["reduce-scatter"],
             "ag_wire_bytes": nbytes["all-gather"],
+            "collective_permute_ops": counts["collective-permute"],
+            "permute_wire_bytes": nbytes["collective-permute"],
+            "payload_bytes_by_dtype": by_dtype_bytes,
+            "payload_ops_by_dtype": by_dtype_ops,
             "n_leaves": n_leaves,
             "n_buckets": case.meta["n_buckets"],
         }
@@ -106,6 +124,7 @@ def compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
 
 def exec_compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
                  quantize: bool = False, momentum: float = 0.0,
+                 wire: str = "auto",
                  n_data: int = 4, n_model: int = 2, pods: int = 0,
                  policy: str = "dp", rounds: int = 3,
                  layouts: tuple[str, ...] = LAYOUTS) -> dict:
@@ -119,17 +138,23 @@ def exec_compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
     integer codes (core/sync.py RS-domain rule), so neither GSPMD's
     all-reduce ordering nor the explicit reduce_scatter changes a single
     bit.  Unquantized f32 means are only order-independent for 2 workers.
+
+    wire="ring-int8" is the deliberate exception: per-hop requantization is
+    chunking-dependent, so the mesh trajectories are asserted within
+    `ring_tolerance` of the host reference (reported as `within_tol`), never
+    bitwise — the drift is the price of int8-on-every-hop and is measured
+    here and in benchmarks/sde_drift.py.
     """
     import numpy as np
 
     from repro.configs import registry as R
     from repro.core import flat as F, local_update as LU
-    from repro.core.sync import make_sync
+    from repro.core.sync import make_sync, ring_tolerance
     from repro.models import api, param as pm
 
     cfg = R.get_smoke_config(arch) if smoke else R.get_config(arch)
     run_cfg = RunConfig(sharding=policy, sync_quantize=quantize,
-                        outer_momentum=momentum)
+                        outer_momentum=momentum, sync_wire=wire)
     mesh = make_debug_mesh(n_data, n_model, pods=pods)
     w = pm.worker_count(policy, mesh)
     waxes = pm.worker_mesh_axes(policy, mesh)
@@ -188,7 +213,12 @@ def exec_compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
 
     ref = run_layout("flat_sharded", with_mesh=False)   # host path reference
     out = {"rounds": rounds, "workers": w, "quantize": quantize,
-           "momentum": momentum, "reference": "flat_sharded(no mesh)"}
+           "momentum": momentum, "wire": wire,
+           "reference": "flat_sharded(no mesh)"}
+    if wire == "ring-int8":
+        amax_d = max(float(np.max(np.abs(l)))
+                     for noise in noises for l in jax.tree.leaves(noise))
+        out["ring_tol"] = ring_tolerance(w, amax_d, rounds)
     for layout in layouts:
         got = run_layout(layout, with_mesh=True)
         diffs = [float(np.max(np.abs(np.asarray(a, np.float32)
@@ -197,6 +227,8 @@ def exec_compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
                  for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref))]
         md = max(diffs)
         out[layout] = {"max_abs_diff": md, "bitwise": md == 0.0}
+        if wire == "ring-int8":
+            out[layout]["within_tol"] = md <= out["ring_tol"]
     return out
 
 
@@ -223,27 +255,44 @@ def main() -> None:
                          "mesh-less flat path (bitwise when --quantize: "
                          "the integer-code mean is order-independent)")
     ap.add_argument("--exec-rounds", type=int, default=3)
+    ap.add_argument("--wire", default="auto", choices=["auto", "ring-int8"],
+                    help="quantized payload wire mode: auto = exact Sq "
+                         "contract in wire_dtype(W) (int16/int32); "
+                         "ring-int8 = W-hop re-quantizing ppermute ring, "
+                         "int8 on every hop, tolerance-based (not bitwise); "
+                         "implies --quantize and flat layouts only")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON record to this path (the "
+                         "multi-device CI matrix publishes these artifacts)")
     args = ap.parse_args()
     dims = [int(x) for x in args.mesh.split("x")]
     pods, n_data, n_model = ([0] + dims if len(dims) == 2 else dims)
+    if args.wire == "ring-int8":
+        args.quantize = True        # the ring carries int8 codes by definition
     if args.param_layout:
         layouts = tuple(args.param_layout.split(","))
         assert all(l in LAYOUTS for l in layouts), layouts
     else:
         layouts = LAYOUTS
+    if args.wire == "ring-int8":
+        layouts = tuple(l for l in layouts if l != "tree") or ("flat_sharded",)
     out = compare(args.arch, smoke=not args.full,
                   quantize=args.quantize,
-                  momentum=args.momentum,
+                  momentum=args.momentum, wire=args.wire,
                   n_data=n_data, n_model=n_model, pods=pods,
                   policy=args.policy, layouts=layouts)
     if args.exec_:
         out["exec"] = exec_compare(args.arch, smoke=not args.full,
                                    quantize=args.quantize,
-                                   momentum=args.momentum,
+                                   momentum=args.momentum, wire=args.wire,
                                    n_data=n_data, n_model=n_model, pods=pods,
                                    policy=args.policy,
                                    rounds=args.exec_rounds, layouts=layouts)
-    print(json.dumps(out))
+    text = json.dumps(out)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    print(text)
 
 
 if __name__ == "__main__":

@@ -205,6 +205,14 @@ def main():
                          "I/O leave the round loop's critical path, "
                          "double-buffered so training never blocks")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
+    ap.add_argument("--quantize", action="store_true",
+                    help="int8-quantized sync deltas (README §Quantized "
+                         "sync); implied by --wire ring-int8")
+    ap.add_argument("--wire", default="auto", choices=["auto", "ring-int8"],
+                    help="quantized payload wire mode (README §Wire modes): "
+                         "auto = exact int16/int32 code-sums; ring-int8 = "
+                         "re-quantizing int8 ppermute ring (needs "
+                         "--param-layout flat|flat_sharded)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8, help="per-worker batch")
@@ -221,7 +229,9 @@ def main():
         schedule=args.schedule, optimizer=args.optimizer, sharding=args.policy,
         total_steps=args.steps, peak_lr=args.peak_lr, alpha=args.alpha,
         h_base=args.h_base, warmup_steps=max(args.steps // 20, 1),
-        remat=False)
+        remat=False,
+        sync_quantize=args.quantize or args.wire == "ring-int8",
+        sync_wire=args.wire)
     mesh = None
     if args.mesh:
         import jax

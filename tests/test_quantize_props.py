@@ -12,10 +12,17 @@ Three families of invariants:
   * integer-code means are order-independent: Σq over workers is exact in
     f32 under any summation order/chunking, and `wire_dtype(W)` always
     holds the sum — the foundation of every cross-layout / cross-process
-    bitwise claim in tests/test_sharded.py and tests/test_multihost.py.
+    bitwise claim in tests/test_sharded.py and tests/test_multihost.py;
+  * the per-hop requantizer (`--wire ring-int8`): a single hop round-trips
+    within half a level of ITS scale, a K-hop chain lands within
+    `ring_tolerance` of the exact running mean, zero/tiny deltas come
+    through exact, and `wire_dtype(w, accum=1)` is int8 for every W (the
+    ring never sums on the wire).
 
 Requires hypothesis (skips as a module otherwise); the deadline is disabled
-globally via the conftest profile.
+globally via the conftest profile.  tests/test_ring_sync.py carries
+deterministic (seeded) versions of the ring properties that run even where
+hypothesis is absent.
 """
 import numpy as np
 import pytest
@@ -27,7 +34,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import flat as F  # noqa: E402
 from repro.core.sync import (_guarded_scale, _quantize_delta,  # noqa: E402
-                             partial_segment_amax, wire_dtype)
+                             partial_segment_amax, ring_codes_host,
+                             ring_tolerance, wire_dtype)
+from repro.kernels import ops as kops  # noqa: E402
 
 _seed = st.integers(0, 2 ** 31 - 1)
 
@@ -150,7 +159,8 @@ def test_integer_code_mean_is_order_independent(w, n, seed):
 # ------------------------------------------- wire_dtype boundary ----------
 
 @pytest.mark.parametrize("w,want", [
-    (1, jnp.int16), (2, jnp.int16), (257, jnp.int16),
+    (1, jnp.int8),        # one worker folds one code: int8 already holds it
+    (2, jnp.int16), (257, jnp.int16),
     (258, jnp.int16),     # 258 * 127 = 32766 — the last int16 worker count
     (259, jnp.int32),     # 259 * 127 = 32893 > int16 max: crossover
     (1024, jnp.int32),
@@ -185,3 +195,79 @@ def test_wire_dtype_exact_sum_at_extremes(w):
     # the crossover is tight: 258 is the last count whose extreme sum fits
     # int16, 259 overflows it
     assert 258 * 127 <= np.iinfo(np.int16).max < 259 * 127
+
+
+@given(w=st.integers(1, 4096))
+@settings(max_examples=40)
+def test_wire_dtype_accum_one_is_always_int8(w):
+    """The ring's wire contract: each hop carries ONE freshly quantized
+    partial mean (accum=1), never a sum — int8 suffices for any W, while
+    the one-shot RS default must widen with W."""
+    assert wire_dtype(w, accum=1) == jnp.int8
+    assert np.dtype(wire_dtype(w)).itemsize >= (2 if w > 1 else 1)
+
+
+# ----------------------------------------- per-hop requantizer (ring) -----
+
+@given(seed=_seed, n=st.integers(1, 300), log_scale=st.integers(-40, 20))
+@settings(max_examples=60)
+def test_ring_single_hop_roundtrip_half_level(seed, n, log_scale):
+    """One requant pass round-trips within half an int8 level of its own
+    (guarded) scale: |dequant(codes) - acc| <= scale/254 elementwise."""
+    rng = np.random.RandomState(seed)
+    acc = jnp.asarray((rng.randn(n) * 2.0 ** log_scale).astype(np.float32))
+    s = _guarded_scale(jnp.max(jnp.abs(acc)))
+    q = kops.ring_quantize_codes(acc, s)
+    assert q.dtype == jnp.int8
+    deq = np.asarray(q, np.float32) * float(s) / 127.0
+    assert np.max(np.abs(deq - np.asarray(acc))) <= float(s) / 254.0 * (
+        1.0 + 1e-6)
+
+
+@given(seed=_seed, w=st.integers(2, 12), n=st.integers(1, 200),
+       log_scale=st.integers(-30, 16))
+@settings(max_examples=40)
+def test_ring_chain_error_within_ring_tolerance(seed, w, n, log_scale):
+    """The K-hop requant chain (ring_codes_host = the mesh ring's exact
+    arithmetic) lands within ring_tolerance(W, amax, 1) of the exact worker
+    mean for arbitrary deltas — the bound every executed-ring assertion in
+    the repo charges per round."""
+    rng = np.random.RandomState(seed)
+    d = (rng.randn(w, n) * 2.0 ** log_scale).astype(np.float32)
+    q, s = ring_codes_host(jnp.asarray(d))
+    got = (np.asarray(q, np.float32)
+           * (np.asarray(s)[:, None] / 127.0)).reshape(-1)
+    pad = (-n) % w
+    exact = np.pad(d, ((0, 0), (0, pad))).mean(axis=0).reshape(-1)
+    err = np.max(np.abs(got - exact))
+    tol = ring_tolerance(w, np.max(np.abs(d)), 1)
+    assert err <= tol, (err, tol)
+
+
+@given(w=st.integers(2, 12), n=st.integers(1, 200))
+@settings(max_examples=20)
+def test_ring_zero_delta_exact(w, n):
+    """All-zero deltas survive every hop exactly: the guarded scale never
+    divides by zero and the mean codes are identically zero."""
+    q, s = ring_codes_host(jnp.zeros((w, n), jnp.float32))
+    assert not np.any(np.asarray(q))
+    assert np.all(np.isfinite(np.asarray(s)))
+
+
+@given(seed=_seed, w=st.integers(2, 12), n=st.integers(1, 200),
+       log_scale=st.integers(-40, -20))
+@settings(max_examples=30)
+def test_ring_tiny_deltas_keep_relative_precision(seed, w, n, log_scale):
+    """Deltas near the subnormal floor still come through with the SAME
+    relative error bound — the per-hop scale is fresh per chunk, so ring
+    precision never depends on the absolute magnitude."""
+    rng = np.random.RandomState(seed)
+    d = (rng.randn(w, n) * 2.0 ** log_scale).astype(np.float32)
+    q, s = ring_codes_host(jnp.asarray(d))
+    got = (np.asarray(q, np.float32)
+           * (np.asarray(s)[:, None] / 127.0)).reshape(-1)
+    pad = (-n) % w
+    exact = np.pad(d, ((0, 0), (0, pad))).mean(axis=0).reshape(-1)
+    amax = np.max(np.abs(d))
+    if amax > 0.0:
+        assert np.max(np.abs(got - exact)) <= ring_tolerance(w, amax, 1)

@@ -1,0 +1,249 @@
+"""The `--wire ring-int8` sync (core/sync.py): W-hop re-quantizing ppermute
+ring over the worker axes, int8 payload on every wire.
+
+The contract under test:
+  * lowering proof (subprocess, 8-device host mesh, dp AND fsdp policies):
+    every payload-sized collective in the compiled ring sync carries s8 —
+    zero int16/int32 payloads, zero payload all-reduces, zero
+    reduce_scatters — with >= (W-1) collective-permutes per bucket, and the
+    ring moves >= 2x fewer bytes than the exact int-codes wire;
+  * executed on the mesh, the ring trajectory stays within the analytic
+    `ring_tolerance` of the mesh-less host reference (tolerance, NOT
+    bitwise: per-hop requantization is chunking-dependent — the deliberate
+    exception to the repo's bitwise rule, README §Wire modes);
+  * `ring_codes_host` / the per-hop kernels satisfy the schedule and error
+    bounds for non-power-of-two worker counts: chunk c seeds at worker
+    (c+1) mod W, folds every worker exactly once, and lands within
+    `ring_tolerance` of the exact mean; zero deltas come through exact;
+  * the RoundEngine overlap seam (sync="overlap", depth 0) stays within the
+    per-round tolerance of the blocking ring trajectory (the auto wire's
+    depth-0 seam is bitwise; the ring's is not, because XLA refusion may
+    flip requant codes across the begin/apply split).
+
+These are the deterministic (seeded) versions of the hypothesis properties
+in tests/test_quantize_props.py — they run even where hypothesis is absent.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.configs.base import RunConfig
+from repro.core import schedules
+from repro.core.sync import (check_wire, ring_codes_host, ring_tolerance,
+                             wire_dtype)
+from repro.kernels import ops as kops
+from repro.optim.lr import make_lr_fn
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ------------------------------------------------- lowering proof (HLO) ---
+
+def _sync_compare(*extra):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.sync_compare",
+         "--arch", "starcoder2-3b", "--wire", "ring-int8", *extra],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout)
+
+
+def _assert_all_s8(r, w):
+    """The acceptance predicate: int8 payload on EVERY wire."""
+    assert set(r["payload_ops_by_dtype"]) == {"s8"}, r["payload_ops_by_dtype"]
+    assert r["payload_all_reduce_ops"] == 0
+    assert r["reduce_scatter_ops"] == 0
+    assert r["collective_permute_ops"] >= (w - 1) * r["n_buckets"]
+
+
+def test_ring_lowers_all_int8_on_dp_mesh_and_exec_within_tol():
+    """dp 4x2 (W=4): s8-only payloads, W-1 permute hops per bucket, and the
+    executed multi-round mesh trajectory within ring_tolerance of the host
+    reference (never bitwise — chunking-dependent requantization).
+
+    The wire claim is flat_sharded-only: the mesh-less flat layout runs the
+    host ring, which GSPMD re-parallelizes with f32 collectives of its own
+    choosing — numerically identical (the exec check below covers it) but
+    not wire-optimal."""
+    rec = _sync_compare("--mesh", "4x2", "--exec", "--exec-rounds", "2")
+    _assert_all_s8(rec["flat_sharded"], w=4)
+    ex = rec["exec"]
+    assert ex["ring_tol"] > 0.0
+    for layout in ("flat", "flat_sharded"):
+        assert ex[layout]["within_tol"], (layout, ex)
+
+
+def test_ring_lowers_all_int8_on_fsdp_pod_mesh():
+    """fsdp 2x2x2 (pods as workers, W=2): the ring still puts nothing but
+    s8 payloads on the wire when buckets chunk over (data, model)."""
+    rec = _sync_compare("--mesh", "2x2x2", "--policy", "fsdp",
+                        "--param-layout", "flat_sharded")
+    _assert_all_s8(rec["flat_sharded"], w=2)
+
+
+def test_ring_beats_int_codes_bytes_2x_on_dp_mesh():
+    """>= 2x bytes-on-wire reduction vs the exact int-codes RS wire (the
+    PR acceptance floor; the committed trajectory point in
+    benchmarks/bench_sync_baseline.json records the same ratio)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.sync_compare",
+         "--arch", "starcoder2-3b", "--mesh", "4x2", "--quantize",
+         "--param-layout", "flat_sharded"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    auto = json.loads(out.stdout)["flat_sharded"]
+    ring = _sync_compare("--mesh", "4x2",
+                         "--param-layout", "flat_sharded")["flat_sharded"]
+    assert ring["bytes_on_wire"] * 2 <= auto["bytes_on_wire"], \
+        (ring["bytes_on_wire"], auto["bytes_on_wire"])
+
+
+# ------------------------------------------ host ring schedule + bounds ---
+
+@pytest.mark.parametrize("w", [3, 5, 6, 7])
+def test_ring_schedule_folds_every_worker_once_non_pow2(w):
+    """Schedule correctness for non-power-of-two W: constant-per-worker
+    deltas quantize exactly at every hop (each partial is constant, so its
+    amax IS the value and the codes saturate at +-127), so the final mean
+    detects any worker visited twice or skipped."""
+    n = 4 * w + 3                      # non-divisible: exercises the pad
+    vals = np.arange(1, w + 1, dtype=np.float32)      # worker j holds j+1
+    d = jnp.asarray(np.repeat(vals[:, None], n, axis=1))
+    q, s = ring_codes_host(d)
+    assert q.dtype == jnp.int8 and s.shape == (w,)
+    mean = (np.asarray(q, np.float32)
+            * (np.asarray(s)[:, None] / 127.0)).reshape(-1)[:n]
+    want = vals.mean()                 # every worker exactly once
+    # partial means fold in f32: allow a few ulps, far below one int8 level
+    np.testing.assert_allclose(mean, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("w", [2, 3, 5, 7, 8])
+def test_ring_codes_error_within_tolerance(w):
+    """K-hop requantization error vs the exact worker mean stays within
+    ring_tolerance(W, amax, 1) for random deltas at wild scales."""
+    rng = np.random.RandomState(w)
+    for log_scale in (-20, 0, 12):
+        d = (rng.randn(w, 257) * 2.0 ** log_scale).astype(np.float32)
+        q, s = ring_codes_host(jnp.asarray(d))
+        got = (np.asarray(q, np.float32)
+               * (np.asarray(s)[:, None] / 127.0)).reshape(-1)
+        pad = (-257) % w
+        exact = np.pad(d, ((0, 0), (0, pad))).mean(axis=0)
+        exact = exact.reshape(w, -1).reshape(-1)
+        err = np.max(np.abs(got - exact))
+        tol = ring_tolerance(w, np.max(np.abs(d)), 1)
+        assert err <= tol, (err, tol, log_scale)
+
+
+def test_ring_zero_delta_exact():
+    """All-zero deltas come through the ring exact: guarded scales never
+    divide by zero and the codes are identically zero."""
+    q, s = ring_codes_host(jnp.zeros((5, 64), jnp.float32))
+    assert not np.any(np.asarray(q))
+    assert np.all(np.isfinite(np.asarray(s)))
+
+
+def test_ring_single_hop_roundtrip_half_level():
+    """One requant pass: |dequant(codes) - acc| <= scale/254 elementwise
+    (half an int8 grid step) — the per-hop bound ring_tolerance sums."""
+    rng = np.random.RandomState(0)
+    acc = jnp.asarray(rng.randn(513).astype(np.float32))
+    s = jnp.max(jnp.abs(acc))
+    q = kops.ring_quantize_codes(acc, s)
+    deq = np.asarray(q, np.float32) * float(s) / 127.0
+    assert np.max(np.abs(deq - np.asarray(acc))) <= float(s) / 254.0 * (
+        1.0 + 1e-6)
+
+
+def test_ring_combine_matches_running_mean():
+    """ring_combine's fold IS the running mean: (k*deq + x)/(k+1), and its
+    magnitude never exceeds the largest contributor (the int8-always-fits
+    invariant)."""
+    rng = np.random.RandomState(3)
+    xs = [jnp.asarray(rng.randn(100).astype(np.float32)) for _ in range(6)]
+    acc = xs[0]
+    s = jnp.max(jnp.abs(acc))
+    q = kops.ring_quantize_codes(acc, s)
+    for k in range(1, 6):
+        acc, amax = kops.ring_combine(q, s, xs[k], k)
+        deq = np.asarray(q, np.float32) * float(s) / 127.0
+        want = (k * deq + np.asarray(xs[k])) / (k + 1)
+        np.testing.assert_allclose(np.asarray(acc), want, rtol=1e-6,
+                                   atol=1e-7)
+        contrib_max = max(float(jnp.max(jnp.abs(x))) for x in xs[:k + 1])
+        assert float(amax) <= contrib_max * (1.0 + 1e-5)
+        s = jnp.float32(amax)
+        q = kops.ring_quantize_codes(acc, s)
+
+
+# ------------------------------------------------------ wire validation ---
+
+def test_wire_dtype_accum_param():
+    """accum=1 (the ring's never-sum-on-the-wire contract) is int8 for any
+    worker count; the one-shot default still widens with W."""
+    for w in (1, 2, 258, 259, 4096):
+        assert wire_dtype(w, accum=1) == jnp.int8
+    assert wire_dtype(258) == jnp.int16
+    assert wire_dtype(259) == jnp.int32
+
+
+def test_check_wire_requires_quantize():
+    assert check_wire(RunConfig(sync_quantize=True,
+                                sync_wire="ring-int8")) == "ring-int8"
+    with pytest.raises(ValueError, match="requires sync_quantize"):
+        check_wire(RunConfig(sync_wire="ring-int8"))
+    with pytest.raises(ValueError, match="unknown sync_wire"):
+        check_wire(RunConfig(sync_quantize=True, sync_wire="ring-int4"))
+
+
+# --------------------------------------------------- engine overlap seam --
+
+def test_engine_ring_overlap_depth0_within_tolerance():
+    """sync="overlap" at depth 0 under the ring wire tracks the blocking
+    trajectory within the per-round requant tolerance (NOT bitwise: the
+    begin/apply split lets XLA refuse the requant chain differently).
+    Mirrors tests/test_sharded.py's depth-0 exactness test, with the
+    tolerance the multihost harness uses."""
+    cfg = R.get_smoke_config("starcoder2-3b")
+    rounds, h = 3, 4
+    run_cfg = RunConfig(schedule="constant", h_base=h,
+                        total_steps=rounds * h, remat=False,
+                        sync_quantize=True, sync_wire="ring-int8")
+    lr_fn = make_lr_fn(run_cfg)
+
+    def train(sync):
+        from repro.core.engine import RoundEngine
+        eng = RoundEngine(cfg, run_cfg, workers=2, b_loc=2, seq=32, seed=0,
+                          layout="flat_sharded", sync=sync, overlap_depth=0)
+        state, t = eng.init_state(), 0
+        for _ in range(rounds):
+            hh = schedules.get_h(run_cfg, t, lr_fn)
+            state, m = eng.run_round(state, t, hh, lr_fn)
+            assert np.isfinite(float(m["loss"]))
+            t += hh
+        return eng.flush(state)
+
+    blk, ovl = train("blocking"), train("overlap")
+    tol = ring_tolerance(2, 4.0 * h * run_cfg.peak_lr, rounds)
+    excess = 0.0
+    for b in blk["params"]:
+        a = np.asarray(blk["params"][b], np.float32)
+        g = np.asarray(ovl["params"][b], np.float32)
+        if not a.size:
+            continue
+        # one output-dtype quantum per round of cast allowance (the
+        # multihost comparison rule: anchor casts may straddle a boundary)
+        eps = (2.0 ** -7 if "bfloat16" in b else 2.0 ** -23) * rounds
+        excess = max(excess, float(np.max(np.abs(a - g)
+                                          - np.abs(a) * eps)))
+    assert excess <= tol, (excess, tol)
