@@ -12,6 +12,31 @@ count) in the small meta side file; `read_meta` recovers it without
 unpacking the state payload, which is what lets the RoundEngine restore a
 checkpoint across layouts (tree <-> flat <-> flat_sharded) by rebuilding
 the matching spec first (core/engine.py `restore`).
+
+## Durability
+
+Every file lands via tmp-write + fsync + `os.replace` + directory fsync
+(`_write_atomic`): a host crash at ANY instant leaves either the previous
+checkpoint or the new one, never a zero-length or torn "atomic" file (the
+rename-without-fsync failure mode).  Readers raise `CheckpointError` — a
+real exception, not an `assert`, because restore paths run under
+`python -O` — on torn payloads, missing shards, or shape/length mismatch.
+
+## Sharded manifest checkpoints (`save_sharded` / `restore_sharded`)
+
+The multi-process form: each process writes ONLY its addressable shards to
+its own `shards-<step>-<pid>.msgpack` (so checkpoint bandwidth scales with
+process count and no process materializes the full state), and process 0
+writes `manifest.msgpack` recording the treedef, per-leaf shapes/dtypes,
+and the shard->file map.  The owner of a replicated shard is the lowest
+process index holding it — computed from the global sharding, so every
+process derives the identical manifest without communicating.  Restore
+re-stitches the full state under ANY process count (each reader assembles
+from all shard files, then lays the result onto its own mesh), and is
+shard-for-shard bitwise vs the monolithic `save` of the same state
+(tests/test_manifest_ckpt.py).  Step-stamped shard filenames + the atomic
+manifest replace mean a writer killed mid-save leaves the previous
+checkpoint fully readable.
 """
 from __future__ import annotations
 
@@ -24,11 +49,25 @@ import msgpack
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint that cannot be restored as claimed: torn/truncated
+    payload, missing shard coverage, or a shape/length mismatch against
+    the `like` tree.  A real exception (not `assert`) so the guard
+    survives `python -O` — the CI smoke leg runs restore under -O."""
+
+
+def _dtype_tag(dt: np.dtype) -> str:
+    # extension dtypes (bfloat16, float8_*) have a `.str` of a raw void
+    # tag ("<V2") that np.dtype() round-trips to an uncastable void array;
+    # their registered name round-trips correctly instead
+    return dt.name if dt.kind == "V" else dt.str
+
+
 def _encode(obj):
     if isinstance(obj, (jax.Array, np.ndarray)):
         a = np.asarray(obj)
-        return {b"__nd__": True, b"dtype": a.dtype.str, b"shape": list(a.shape),
-                b"data": a.tobytes()}
+        return {b"__nd__": True, b"dtype": _dtype_tag(a.dtype),
+                b"shape": list(a.shape), b"data": a.tobytes()}
     return obj
 
 
@@ -51,6 +90,26 @@ def stage(tree: Any) -> Any:
     return jax.tree.unflatten(treedef, jax.device_get(leaves))
 
 
+def _write_atomic(path: str, name: str, data: bytes) -> None:
+    """Crash-durable file publish: tmp write + fsync(file) + os.replace +
+    fsync(directory).  Without the file fsync, a host crash after the
+    rename can surface a zero-length "atomic" file (the rename outlives
+    the data in the journal); without the directory fsync, the rename
+    itself can be lost.  Either way the previous version, if any, stays
+    intact."""
+    tmp = os.path.join(path, name + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(path, name))
+    dfd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
 def save(path: str, tree: Any, *, step: int | None = None,
          extra: dict | None = None) -> None:
     """`extra` is free-form msgpack-serializable run metadata (e.g. the
@@ -64,16 +123,12 @@ def save(path: str, tree: Any, *, step: int | None = None,
         "extra": extra or {},
         "leaves": [_encode(x) for x in leaves],
     }
-    tmp = os.path.join(path, "state.msgpack.tmp")
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
-    os.replace(tmp, os.path.join(path, "state.msgpack"))
+    _write_atomic(path, "state.msgpack", msgpack.packb(payload,
+                                                       use_bin_type=True))
     # small side file so read_meta() never has to unpack the state payload
-    tmp = os.path.join(path, "meta.msgpack.tmp")
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb({"step": step, "extra": extra or {}},
-                              use_bin_type=True))
-    os.replace(tmp, os.path.join(path, "meta.msgpack"))
+    _write_atomic(path, "meta.msgpack",
+                  msgpack.packb({"step": step, "extra": extra or {}},
+                                use_bin_type=True))
 
 
 def layout_meta(layout: str, spec=None) -> dict:
@@ -98,19 +153,49 @@ def restore(path: str, like: Any) -> tuple[Any, int | None]:
     return tree, step
 
 
+def _read_payload(path: str, name: str) -> dict:
+    """Unpack one checkpoint file, mapping a torn/truncated/corrupt payload
+    to CheckpointError (msgpack raises half a dozen exception types on bad
+    bytes; a crash mid-write plus a missing fsync is exactly how such a
+    file appears on disk)."""
+    fname = os.path.join(path, name)
+    try:
+        with open(fname, "rb") as f:
+            payload = msgpack.unpackb(f.read(), raw=False,
+                                      strict_map_key=False)
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise CheckpointError(f"torn or corrupt checkpoint file "
+                              f"{fname}: {type(e).__name__}: {e}") from e
+    if not isinstance(payload, dict):
+        raise CheckpointError(f"torn or corrupt checkpoint file {fname}: "
+                              f"payload is {type(payload).__name__}")
+    return payload
+
+
 def restore_with_meta(path: str, like: Any) -> tuple[Any, int | None, dict]:
-    """Like `restore`, plus the `extra` metadata dict — one file read."""
-    with open(os.path.join(path, "state.msgpack"), "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    """Like `restore`, plus the `extra` metadata dict — one file read.
+
+    Shape/length mismatches against `like` raise CheckpointError — a real
+    error, not an `assert`, so the guard survives `python -O` (a stripped
+    check would silently restore a mis-shaped state)."""
+    payload = _read_payload(path, "state.msgpack")
     leaves_like, treedef = jax.tree.flatten(like)
-    raw = [_decode(x) for x in payload["leaves"]]
-    assert len(raw) == len(leaves_like), (len(raw), len(leaves_like))
+    raw = [_decode(x) for x in payload.get("leaves") or []]
+    if len(raw) != len(leaves_like):
+        raise CheckpointError(
+            f"checkpoint at {path} holds {len(raw)} leaves, the target "
+            f"structure expects {len(leaves_like)}")
     out = []
     for got, want in zip(raw, leaves_like):
         if isinstance(want, (jax.Array, np.ndarray, jnp.ndarray)):
             w = np.asarray(want)
             g = np.asarray(got)
-            assert g.shape == w.shape, (g.shape, w.shape)
+            if g.shape != w.shape:
+                raise CheckpointError(
+                    f"checkpoint leaf shape {g.shape} does not match the "
+                    f"target shape {w.shape}")
             out.append(jnp.asarray(g.astype(w.dtype)))
         else:
             out.append(got)
@@ -133,3 +218,162 @@ def read_meta(path: str) -> tuple[int | None, dict]:
 
 def exists(path: str) -> bool:
     return os.path.exists(os.path.join(path, "state.msgpack"))
+
+
+# --------------------------------------------------------------------------
+# Sharded manifest checkpoints (module docstring §Sharded manifest)
+# --------------------------------------------------------------------------
+
+def _norm_index(idx, shape) -> tuple:
+    """A device's shard index (tuple of slices) as ((start, stop), ...) —
+    hashable, msgpack-able, and resolved against the global shape."""
+    return tuple(sl.indices(dim)[:2] for sl, dim in zip(idx, shape))
+
+
+def _shard_owners(x: jax.Array) -> dict:
+    """index -> owning process for every shard of a (possibly replicated)
+    global array: the LOWEST process index holding a replica.  Derived
+    from the global sharding, so every process computes the identical map
+    without communicating — that is what lets each process write its shard
+    file independently and process 0 name them all in the manifest."""
+    owners: dict = {}
+    for d, idx in x.sharding.devices_indices_map(x.shape).items():
+        key = _norm_index(idx, x.shape)
+        if key not in owners or d.process_index < owners[key]:
+            owners[key] = d.process_index
+    return owners
+
+
+def _shard_fname(step, pid: int) -> str:
+    # step-stamped so a writer killed mid-save never clobbers the shard
+    # files the PREVIOUS manifest still names
+    return f"shards-{int(step or 0):08d}-{pid:05d}.msgpack"
+
+
+def save_sharded(path: str, tree: Any, *, step: int | None = None,
+                 extra: dict | None = None, barrier=None) -> None:
+    """Per-process shard-file checkpoint.  THIS process writes only the
+    shards it owns (its addressable shards, minus replicas owned by a
+    lower process) to its own file; process 0 then writes the manifest +
+    meta side file.  `barrier` — a zero-arg callable, e.g. a cross-process
+    sync — runs between the two, so the manifest never names a shard file
+    that is not yet durable.  Single-process states (numpy or
+    unsharded jax arrays) degenerate to one shard file holding
+    everything.  All files land via `_write_atomic`."""
+    pid, nproc = jax.process_index(), jax.process_count()
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    man_leaves: list = []           # per-leaf shape/dtype (or inline value)
+    fmap: dict = {}                 # fname -> [[leaf_idx, index], ...]
+    mine: list = []                 # this process's shard payload
+    for li, x in enumerate(leaves):
+        if isinstance(x, jax.Array):
+            shape, dt = x.shape, np.dtype(x.dtype)
+            man_leaves.append({"kind": "array", "shape": list(shape),
+                               "dtype": _dtype_tag(dt)})
+            local = {_norm_index(s.index, shape): s
+                     for s in x.addressable_shards}
+            for key, owner in sorted(_shard_owners(x).items()):
+                ser = [list(se) for se in key]
+                fmap.setdefault(_shard_fname(step, owner), []).append(
+                    [li, ser])
+                if owner == pid:
+                    data = np.ascontiguousarray(
+                        np.asarray(local[key].data))
+                    mine.append([li, ser, data.tobytes()])
+        elif isinstance(x, np.ndarray):
+            man_leaves.append({"kind": "array", "shape": list(x.shape),
+                               "dtype": _dtype_tag(x.dtype)})
+            ser = [[0, n] for n in x.shape]
+            fmap.setdefault(_shard_fname(step, 0), []).append([li, ser])
+            if pid == 0:
+                mine.append([li, ser,
+                             np.ascontiguousarray(x).tobytes()])
+        else:
+            man_leaves.append({"kind": "value", "value": x})
+    _write_atomic(path, _shard_fname(step, pid),
+                  msgpack.packb({"entries": mine}, use_bin_type=True))
+    if barrier is not None:
+        barrier()
+    if pid == 0:
+        _write_atomic(path, "manifest.msgpack", msgpack.packb(
+            {"treedef": str(treedef), "step": step, "extra": extra or {},
+             "leaves": man_leaves, "files": fmap,
+             "process_count": nproc}, use_bin_type=True))
+        _write_atomic(path, "meta.msgpack",
+                      msgpack.packb({"step": step, "extra": extra or {}},
+                                    use_bin_type=True))
+        # retire shard files no manifest names anymore (older steps)
+        for f in os.listdir(path):
+            if (f.startswith("shards-") and f.endswith(".msgpack")
+                    and f not in fmap):
+                os.unlink(os.path.join(path, f))
+
+
+def restore_sharded(path: str, like: Any) -> tuple[Any, int | None, dict]:
+    """Re-stitch a `save_sharded` checkpoint into the structure of `like`
+    — under ANY process count: every reader assembles the full leaves from
+    the manifest's shard->file map (a mesh engine then lays them onto its
+    own devices).  Raises CheckpointError on a torn manifest/shard file,
+    incomplete shard coverage, or a shape/length mismatch."""
+    man = _read_payload(path, "manifest.msgpack")
+    leaves_like, treedef = jax.tree.flatten(like)
+    man_leaves = man.get("leaves") or []
+    if len(man_leaves) != len(leaves_like):
+        raise CheckpointError(
+            f"manifest at {path} holds {len(man_leaves)} leaves, the "
+            f"target structure expects {len(leaves_like)}")
+    bufs: list = []
+    filled = [0] * len(man_leaves)
+    for ml, want in zip(man_leaves, leaves_like):
+        if ml.get("kind") == "value":
+            bufs.append(ml.get("value"))
+            continue
+        shape = tuple(ml["shape"])
+        if isinstance(want, (jax.Array, np.ndarray, jnp.ndarray)):
+            w = np.asarray(want)
+            if shape != w.shape:
+                raise CheckpointError(
+                    f"manifest leaf shape {shape} does not match the "
+                    f"target shape {w.shape}")
+        bufs.append(np.empty(shape, np.dtype(ml["dtype"])))
+    for fname in sorted(man.get("files") or {}):
+        try:
+            shard = _read_payload(path, fname)
+        except FileNotFoundError as e:
+            raise CheckpointError(
+                f"manifest at {path} names a missing shard file "
+                f"{fname}") from e
+        for li, ser, data in shard.get("entries") or []:
+            buf = bufs[li]
+            piece = np.frombuffer(data, dtype=buf.dtype).reshape(
+                [e - s for s, e in ser])
+            buf[tuple(slice(s, e) for s, e in ser)] = piece
+            filled[li] += piece.size
+    for li, (ml, buf) in enumerate(zip(man_leaves, bufs)):
+        if ml.get("kind") != "value" and filled[li] != buf.size:
+            raise CheckpointError(
+                f"leaf {li}: shard files cover {filled[li]} of "
+                f"{buf.size} elements — missing or torn shard file")
+    out = []
+    for buf, want in zip(bufs, leaves_like):
+        if isinstance(want, (jax.Array, np.ndarray, jnp.ndarray)):
+            out.append(jnp.asarray(buf.astype(np.asarray(want).dtype)))
+        else:
+            out.append(buf)
+    return (jax.tree.unflatten(treedef, out), man.get("step"),
+            man.get("extra") or {})
+
+
+def is_manifest(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "manifest.msgpack"))
+
+
+def read_manifest_meta(path: str) -> tuple[int | None, dict]:
+    """(step, extra) for a manifest checkpoint — from the meta side file
+    when present (process 0 writes it with the manifest), else the
+    manifest itself."""
+    if os.path.exists(os.path.join(path, "meta.msgpack")):
+        return read_meta(path)
+    man = _read_payload(path, "manifest.msgpack")
+    return man.get("step"), man.get("extra") or {}

@@ -65,6 +65,24 @@ on the padded buffers, bitwise-equal to tree/flat (tests/test_sharded.py).
 `sync="blocking"` (default): every round ends with the full sync — reduce,
 outer update, and broadcast in the round program, exactly Alg. 1/2.
 
+`sync="partial"`: the boundary sync averages over the workers that
+*arrived* — each round takes a membership mask `[W]` as a traced argument
+(no recompile when participation changes) and the mean divides by |P|, the
+participant count, instead of W (core/sync.py make_sync_partial).  A
+masked lane still runs the boundary collective (it is alive, just late or
+untrusted), so it re-anchors to the participants' consensus at the same
+boundary — its round's local progress is excluded from the mean and
+discarded, which IS the rejoin rule: the next round it participates it
+starts from consensus.  A lane that is *gone* (dead process) instead
+leaves through a resize — `membership_epoch(keep_lanes=...)`, or for mesh
+worlds the checkpoint + respawn path (launch/multihost.py run_elastic).
+Membership may only change at a round boundary, through
+`membership_epoch()` — the MembershipEpoch record is the audit trail.  The same call resizes the worker axis itself (lanes leave or
+join between rounds): the state is re-padded through the tree layout, the
+`ShardedFlatSpace` rebuilt for the new W, and the compile cache — keyed by
+(Hp, W) — keeps the old-W programs parked so a reverted membership change
+recompiles nothing.
+
 `sync="overlap"`: the round program ends with only the *reduce* half
 (core/sync.py make_sync_begin) and hands the engine a pending mean; the
 *gather/apply* half runs inside the NEXT round's program, after its first
@@ -80,17 +98,20 @@ benchmarks/table4_walltime.py rather than asserted.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import io as ckpt_io
 from repro.core import flat
 from repro.core import local_update as LU
 from repro.core import schedules
-from repro.core.sync import make_sync, make_sync_apply, make_sync_begin
+from repro.core.sync import (make_sync, make_sync_apply, make_sync_begin,
+                             make_sync_partial)
 from repro.data.synthetic import TokenStream, device_batch_fn, make_train_batch
 from repro.models import api, common as cm, param as pm
 
@@ -102,6 +123,35 @@ class PendingSyncError(RuntimeError):
     required.  A real exception, not a bare `assert`: checkpoint/readout
     paths run under `python -O`, which strips asserts — a stripped guard
     would silently hand out (or persist) pre-consensus params."""
+
+
+class MembershipError(RuntimeError):
+    """An illegal worker-set change: membership may only move at a round
+    boundary (never with a sync in flight), masks must keep at least one
+    participant, and mesh-backed engines resize their worker axis through
+    checkpoint + respawn (launch/multihost.py run_elastic), never in-place
+    — `jax.distributed` cannot shrink a live process group.  Survives
+    `python -O` for the same reason PendingSyncError does."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipEpoch:
+    """One round-boundary change of the worker set — the audit record
+    `membership_epoch()` appends to `engine.epochs`.
+
+    index:      epoch ordinal (0 = the run's initial membership)
+    workers:    worker-axis size W after the change
+    membership: the participation mask in force, one float per lane
+    resized:    True when the W axis itself changed (lanes joined/left),
+                False for a pure participation-mask change
+    parked:     compile-cache keys left unreachable by a resize — still
+                cached, so reverting to that W recompiles nothing
+    """
+    index: int
+    workers: int
+    membership: tuple[float, ...]
+    resized: bool
+    parked: tuple = ()
 
 
 # --------------------------------------------------------------------------
@@ -154,6 +204,19 @@ def _metrics(state, losses, gns, denom):
 # Round-program builders (module-level so launch/shapes.py can lower them
 # without an engine instance)
 # --------------------------------------------------------------------------
+
+def _remap_worker_lanes(tree_state: Pytree, lanes: list[int]) -> Pytree:
+    """Tree-layout state with its worker axis re-padded to `lanes` (source
+    lane per new slot; repeating a lane clones it — params AND moments, so
+    a joined lane starts as a consensus replica).  Anchors, outer momentum,
+    and the shared step counter carry no worker axis and pass through."""
+    take = lambda x: jnp.stack([x[i] for i in lanes])
+    out = dict(tree_state)
+    out["params"] = jax.tree.map(take, tree_state["params"])
+    out["opt"] = {k: (jax.tree.map(take, v) if k in flat._STACKED else v)
+                  for k, v in tree_state["opt"].items()}
+    return out
+
 
 def _masked_body(local_step):
     """Per-step masked executor shared by the bucketed/overlap rounds.
@@ -216,6 +279,58 @@ def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None,
                 step, state, (jnp.arange(hp), lrs, mask),
                 unroll=cm.scan_unroll())
             return finish(state, losses, gns, mask)
+
+    return round_fn
+
+
+def make_partial_round(cfg, run_cfg, synth: Callable | None = None,
+                       spec=None):
+    """Bucketed round whose boundary sync averages over ARRIVED workers.
+
+    Host data:   fn(state, membership [W], batches [Hp,...], lrs, mask)
+    Device data: fn(state, membership [W], t0 scalar, lrs, mask)
+    -> (state, metrics).
+
+    `membership` is a float mask over the worker axis, a *traced* argument:
+    the participant set changes round to round without recompiling.  All W
+    lanes still run their local steps (a straggler's compute is its own
+    loss); only the boundary mean is restricted — Σ masked deltas / |P|,
+    exact in the integer-code domain under quantized sync (core/sync.py
+    §Partial participation).  The apply then broadcasts the participants'
+    consensus to every lane, masked ones included: an excluded round's
+    local progress is discarded and the lane re-anchors, so it rejoins
+    from consensus.  Lanes whose PROCESS is gone leave through
+    membership_epoch resize / run_elastic instead — they cannot run a
+    collective at all.
+    """
+    local_step = LU.make_local_step(cfg, run_cfg, with_metrics=True,
+                                    spec=spec)
+    sync = make_sync_partial(run_cfg, spec=spec)
+    body = _masked_body(local_step)
+
+    def finish(state, membership, losses, gns, mask):
+        denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+        m = _metrics(state, losses, gns, denom)
+        return sync(state, membership), m
+
+    if synth is None:
+        def round_fn(state, membership, batches, lrs, mask):
+            def step(st, xs):
+                batch, lr, valid = xs
+                return body(st, lambda: batch, lr, valid)
+            state, (losses, gns) = jax.lax.scan(
+                step, state, (batches, lrs, mask), unroll=cm.scan_unroll())
+            return finish(state, membership, losses, gns, mask)
+    else:
+        def round_fn(state, membership, t0, lrs, mask):
+            hp = lrs.shape[0]
+            def step(st, xs):
+                i, lr, valid = xs
+                return body(st, lambda: synth(t0 + i), lr, valid)
+            state, (losses, gns) = jax.lax.scan(
+                step, state, (jnp.arange(hp), lrs, mask),
+                unroll=cm.scan_unroll())
+            return finish(state, membership, losses, gns, mask)
 
     return round_fn
 
@@ -385,7 +500,7 @@ class RoundEngine:
         assert mode in ("bucketed", "legacy"), mode
         assert data in ("device", "host"), data
         assert layout in ("tree", "flat", "flat_sharded"), layout
-        assert sync in ("blocking", "overlap"), sync
+        assert sync in ("blocking", "overlap", "partial"), sync
         assert overlap_depth >= 0, overlap_depth
         assert mesh is None or layout == "flat_sharded", \
             "a mesh drives the explicit-collective sync: layout=flat_sharded"
@@ -396,7 +511,7 @@ class RoundEngine:
                 f"engine built with {workers}"
         self.mesh, self.policy = mesh, policy
         assert sync == "blocking" or mode == "bucketed", \
-            "overlapped sync runs through the bucketed program"
+            "overlap/partial sync runs through the bucketed program"
         assert batch_fn is None or data == "host", \
             "batch_fn is a host-data source; pass data='host'"
         assert cfg.family != "vision" or (data == "host" and batch_fn), \
@@ -408,6 +523,11 @@ class RoundEngine:
         self.shards = shards
         self._pending = None          # overlap mode: in-flight reduce
         self._flush_fn = None
+        # elastic membership: participation mask over the worker axis (all
+        # lanes arrive by default) + the epoch audit trail.  Only
+        # membership_epoch() may change either — and only between rounds.
+        self.membership = np.ones(workers, np.float32)
+        self.epochs: list[MembershipEpoch] = []
         # donation is a no-op warning on CPU; auto-enable elsewhere
         self.donate = (jax.default_backend() != "cpu") if donate is None else donate
         self.stream = TokenStream(vocab=max(cfg.vocab, 2), seed=seed)
@@ -495,10 +615,14 @@ class RoundEngine:
     # -- compilation ------------------------------------------------------
 
     def _program(self, hp: int, apply_pending: bool = False):
-        """Jitted round program for padded length hp (the cache key; overlap
-        mode also keys on whether a pending sync is applied — the first
-        round of a run has none)."""
-        key = (hp, apply_pending) if self.sync_mode == "overlap" else hp
+        """Jitted round program for padded length hp.  Cache key: (hp, W) —
+        a membership RESIZE moves W and so reaches fresh entries while the
+        old-W programs stay parked for an instant revert; a pure mask
+        change reuses the same program (membership is a traced argument).
+        Overlap mode also keys on whether a pending sync is applied — the
+        first round of a run has none."""
+        key = ((hp, apply_pending, self.workers)
+               if self.sync_mode == "overlap" else (hp, self.workers))
         if key in self._programs:
             self.cache_hits += 1
             return self._programs[key]
@@ -508,6 +632,10 @@ class RoundEngine:
                                     spec, depth=self.overlap_depth,
                                     apply_pending=apply_pending)
             donate = (0, 1) if apply_pending else (0,)
+        elif self.sync_mode == "partial":
+            fn = make_partial_round(self.cfg, self.run_cfg, self._synth,
+                                    spec)
+            donate = (0,)
         else:
             make = (make_bucketed_round if self.mode == "bucketed"
                     else make_exact_round)
@@ -554,6 +682,8 @@ class RoundEngine:
         args.append(lrs)
         if self.mode == "bucketed":
             args.append(jnp.arange(hp) < h)
+        if self.sync_mode == "partial":
+            args.insert(0, jnp.asarray(self.membership, jnp.float32))
         if self.sync_mode == "overlap":
             if self._pending is not None:
                 args.insert(0, self._pending)
@@ -583,6 +713,100 @@ class RoundEngine:
         self._pending = None
         return state
 
+    # -- elastic membership -----------------------------------------------
+
+    def membership_epoch(self, membership: Sequence[float] | None = None, *,
+                         state: Pytree | None = None,
+                         keep_lanes: Sequence[int] | None = None,
+                         grow_to: int | None = None) -> Pytree | None:
+        """The ONLY legal place the worker set changes — a round boundary.
+
+        Three shapes of change, each recorded as a MembershipEpoch:
+
+        * `membership_epoch([1, 1, 0, 1])` — participation mask for the
+          next rounds (sync="partial" engines): lane 2 keeps training but
+          its delta is excluded from the boundary mean, which divides by
+          |P|=3.  W unchanged, nothing recompiles (the mask is traced).
+        * `membership_epoch(state=st, keep_lanes=(0, 1, 3))` — lanes LEAVE:
+          the worker axis shrinks to the kept lanes.  Returns the resized
+          state; the flat spec is rebuilt and the (hp, W) compile cache
+          reaches fresh entries while the old-W programs stay parked.
+        * `membership_epoch(state=st, grow_to=4)` — lanes JOIN: new lanes
+          clone lane 0 — the post-sync consensus params (re-anchoring, the
+          ISSUE's rejoin rule) AND its optimizer moments (zeros would
+          de-bias Adam against the shared step counter).
+
+        Raises MembershipError with a sync in flight (the pending reduce
+        was taken over the OLD membership), on an empty mask, or on a
+        resize under a live mesh — `jax.distributed` process groups cannot
+        shrink in place, so mesh worlds resize through the manifest
+        checkpoint + respawn path (launch/multihost.py run_elastic), each
+        OS-process generation being one epoch.
+        """
+        if self._pending is not None:
+            raise MembershipError(
+                "membership may only change at a round boundary: a sync is "
+                "in flight over the old worker set — flush() first")
+        resize = keep_lanes is not None or grow_to is not None
+        if resize:
+            if self.mesh is not None:
+                raise MembershipError(
+                    "mesh-backed engines resize via checkpoint + respawn "
+                    "(launch/multihost.py run_elastic), not in place")
+            if state is None:
+                raise MembershipError("a resize needs the run state")
+            if keep_lanes is not None:
+                lanes = [int(i) for i in keep_lanes]
+                if not lanes or not all(0 <= i < self.workers
+                                        for i in lanes):
+                    raise MembershipError(
+                        f"keep_lanes {lanes} out of range for "
+                        f"W={self.workers}")
+            else:
+                if grow_to <= self.workers:
+                    raise MembershipError(
+                        f"grow_to={grow_to} does not grow W={self.workers}")
+                lanes = list(range(self.workers)) + \
+                    [0] * (grow_to - self.workers)
+            state = self._resize_lanes(state, lanes)
+            self.membership = np.ones(self.workers, np.float32)
+        elif membership is not None:
+            mask = np.asarray(membership, np.float32)
+            if mask.shape != (self.workers,) or mask.sum() < 1:
+                raise MembershipError(
+                    f"membership mask must be [{self.workers}] with at "
+                    f"least one participant, got {mask!r}")
+            self.membership = mask
+        parked = tuple(k for k in self._programs
+                       if k[-1] != self.workers) if resize else ()
+        self.epochs.append(MembershipEpoch(
+            index=len(self.epochs), workers=self.workers,
+            membership=tuple(float(x) for x in self.membership),
+            resized=resize, parked=parked))
+        return state
+
+    def _resize_lanes(self, state: Pytree, lanes: list[int]) -> Pytree:
+        """Re-pad the worker axis to `lanes` (source lane per new slot),
+        through the tree layout as the common currency — exactly the
+        cross-layout restore route, so the kept lanes stay bitwise.  The
+        flat spec, batch synthesizer, and flush program are all rebuilt
+        for the new W."""
+        spec = self._ensure_spec() if self.layout != "tree" else None
+        tree_state = (state if spec is None
+                      else flat.to_tree_state(spec, state))
+        tree_state = _remap_worker_lanes(tree_state, lanes)
+        self.workers = len(lanes)
+        self.spec = None
+        self._flush_fn = None
+        if self.data == "device":
+            self._synth = device_batch_fn(self.cfg, self.stream,
+                                          self.workers, self.b_loc, self.seq)
+        if self.layout == "tree":
+            return tree_state
+        params_single = jax.tree.map(lambda x: x[0], tree_state["params"])
+        return flat.to_flat_state(self._ensure_spec(params_single),
+                                  tree_state)
+
     # -- checkpointing ----------------------------------------------------
 
     def checkpoint_extra(self) -> dict:
@@ -593,6 +817,7 @@ class RoundEngine:
         advancing while the background writer runs."""
         spec = self._ensure_spec() if self.layout != "tree" else None
         return {"h_trace": [[t, h] for t, h in self.h_trace],
+                "workers": self.workers,
                 **ckpt_io.layout_meta(self.layout, spec)}
 
     def save(self, path: str, state: Pytree, *, step: int,
@@ -664,6 +889,9 @@ class RoundEngine:
                 state = flat.to_tree_state(ck_spec, state)
             if self.layout != "tree":
                 state = flat.to_flat_state(self._ensure_spec(), state)
+        return state, self._adopt_trace(extra, step)
+
+    def _adopt_trace(self, extra: dict, step) -> int:
         trace = [(int(t), int(h)) for t, h in extra.get("h_trace", [])]
         step = int(step or 0)
         if trace:
@@ -673,4 +901,86 @@ class RoundEngine:
                     f"checkpoint step {step} is not the round boundary "
                     f"implied by its H-trace (ends at {done})")
         self.h_trace = trace
-        return state, step
+        return step
+
+    def save_sharded(self, path: str, state: Pytree, *, step: int,
+                     flush_pending: bool = False, barrier=None) -> None:
+        """Per-host shard-file checkpoint (checkpoint/io.py save_sharded):
+        this process writes ONLY its addressable shards; process 0 adds the
+        manifest naming every shard file.  `barrier` (a zero-arg callable,
+        e.g. a cross-process sync) runs after the shard files are durable
+        and before the manifest is written, so a manifest never names a
+        file that doesn't exist yet.  Same PendingSyncError contract as
+        `save`."""
+        if self._pending is not None:
+            if not flush_pending:
+                raise PendingSyncError(
+                    "overlap sync in flight: save_sharded(flush_pending="
+                    "True) writes the synced consensus without disturbing "
+                    "the pipeline, or flush() first")
+            state = self.synced_view(state)
+        ckpt_io.save_sharded(path, state, step=step,
+                             extra=self.checkpoint_extra(), barrier=barrier)
+
+    def restore_elastic(self, path: str, like_state: Pytree) -> tuple[Pytree, int]:
+        """Restore a checkpoint written under ANY worker count — and any
+        layout / shard count / process count, manifest or monolithic —
+        into this engine.  Writer lanes beyond this engine's W are dropped
+        (highest first); missing lanes clone the checkpoint's lane 0: at a
+        round boundary every *participating* lane holds the post-sync
+        consensus, so the clone IS the re-anchoring rule a rejoining
+        worker needs (params and moments both — zero moments would
+        de-bias Adam against the shared step counter).
+
+        The lane remap runs through the tree layout exactly like the
+        cross-layout `restore` route, so surviving lanes stay bitwise."""
+        if self._pending is not None:
+            raise PendingSyncError(
+                "restore_elastic() with an overlap sync in flight would "
+                "orphan the pending reduce: flush() first")
+        # the writer-geometry `like` built below only needs SHAPES: rebuild
+        # the template from host zeros so the lane remap never issues an
+        # eager cross-device gather on mesh-global state — under gloo that
+        # gather deadlocks whenever one process owns more than one device
+        # (2 procs x 2 devices, say).  The restore itself is host-side
+        # anyway, and _to_global lays the result back onto the mesh.
+        like_state = jax.tree.map(
+            lambda x: (np.zeros(x.shape, x.dtype)
+                       if isinstance(x, (jax.Array, np.ndarray)) else x),
+            like_state)
+        manifest = ckpt_io.is_manifest(path)
+        _, extra = (ckpt_io.read_manifest_meta(path) if manifest
+                    else ckpt_io.read_meta(path))
+        ck_layout = extra.get("layout", "tree")
+        ck_shards = extra.get("shards")
+        ck_w = int(extra.get("workers") or self.workers)
+        # a like tree in the WRITER's geometry, built from this engine's
+        # state: lanes remapped to ck_w (shapes are all that matter here),
+        # then laid out as the writer's layout
+        my_tree = (like_state if self.layout == "tree"
+                   else flat.to_tree_state(self._ensure_spec(), like_state))
+        to_ck = (list(range(ck_w)) if ck_w <= self.workers
+                 else list(range(self.workers)) + [0] * (ck_w - self.workers))
+        ck_tree = _remap_worker_lanes(my_tree, to_ck)
+        ck_spec = None
+        if ck_layout != "tree":
+            params_single = jax.tree.map(lambda x: x[0], ck_tree["params"])
+            ck_spec = (flat.ShardedFlatSpace(params_single, ck_shards or 1)
+                       if ck_layout == "flat_sharded"
+                       else flat.FlatParamSpace(params_single))
+        like = (ck_tree if ck_spec is None
+                else flat.to_flat_state(ck_spec, ck_tree))
+        rest = (ckpt_io.restore_sharded if manifest
+                else ckpt_io.restore_with_meta)
+        state, step, extra = rest(path, like)
+        if ck_spec is not None:
+            state = flat.to_tree_state(ck_spec, state)
+        back = (list(range(self.workers)) if ck_w >= self.workers
+                else list(range(ck_w)) + [0] * (self.workers - ck_w))
+        state = _remap_worker_lanes(state, back)
+        if self.layout != "tree":
+            state = flat.to_flat_state(self._ensure_spec(), state)
+        if self.mesh is not None:
+            state = self._to_global(state)
+        self.membership = np.ones(self.workers, np.float32)
+        return state, self._adopt_trace(extra, step)

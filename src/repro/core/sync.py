@@ -61,6 +61,28 @@ steps of the next round (core/engine.py).  Quantized pending syncs are
 `{"q": codes-mean-or-sum, "scale": per-element scales}` — the apply leg
 dequantizes and runs the outer update in one fused pass
 (kernels/sync_update.py `sync_apply_update`).
+
+## Partial participation (`--sync partial`, README §Elastic training)
+
+`partial=True` variants of the two halves take a per-round membership mask
+m ∈ {0,1}^W: the mean runs over the workers that ARRIVED, Σ_i m_i x_i / |P|
+with |P| = Σ m.  Absent lanes are masked out of the delta BEFORE the scale
+statistic and the quantizer, so (a) the per-tensor amax is exactly the
+participant amax (|0| never raises a max), (b) an absent worker's codes are
+exactly 0 (contributing nothing to Σq), and (c) the mean stays exact in the
+integer-code domain: Σ_{i∈P} q_i is an integer sum in any collective order,
+divided by |P| once at apply time — bitwise identical to a W'=|P| run over
+the participant rows (tests/test_elastic.py, multihost --mode partial).
+With m = 1 everywhere the partial sync is bitwise the blocking sync for
+power-of-two W (x·1.0 is exact, and Σ/W — true IEEE division — matches
+jnp.mean's multiply-by-reciprocal lowering exactly iff the divisor is a
+power of two; for other |P| the partial path itself, m = 1 on the
+participant rows, is the bitwise reference).  The exact apply broadcasts the consensus to
+ALL W lanes — absent workers re-anchor to consensus the moment they rejoin,
+which is what makes local-gradient training naturally fault-tolerant: a
+worker lost mid-round costs only its local steps since the last boundary.
+The ring wire does not compose with partial masks (the running-mean fold
+bakes W into every hop) and raises.
 """
 from __future__ import annotations
 
@@ -108,14 +130,18 @@ def _quantize_delta(delta):
     return jax.tree.map(one, delta)
 
 
-def flat_delta_scales(spec, bucket: str, p, anchor):
+def flat_delta_scales(spec, bucket: str, p, anchor, mask=None):
     """Per-tensor int8 scales for one flat bucket, spread to elements [N].
 
     Identical statistics to the tree path: max|p - anchor| over the worker
     axis and every element of each leaf (max is exact, so the segment
-    reduction matches per-leaf `jnp.max` bitwise)."""
-    d = jnp.max(jnp.abs(p.astype(jnp.float32)
-                        - anchor.astype(jnp.float32)[None]), axis=0)
+    reduction matches per-leaf `jnp.max` bitwise).  A membership `mask`
+    ([W] f32) zeroes absent lanes' deltas first, so the statistic is
+    exactly the participant amax (|0| never raises a max)."""
+    d = jnp.abs(p.astype(jnp.float32) - anchor.astype(jnp.float32)[None])
+    if mask is not None:
+        d = d * mask[:, None]
+    d = jnp.max(d, axis=0)
     return spec.spread(bucket, _guarded_scale(spec.segment_max(bucket, d)))
 
 
@@ -163,21 +189,33 @@ def _use_collectives(spec) -> bool:
             and bool(getattr(spec, "worker_axes", ())))
 
 
-def _rs_mean(spec, x, w: int):
+def _rs_mean(spec, x, w: int, mask=None):
     """[W, N] bucket -> worker-mean chunks [W, N/W] via ONE reduce_scatter
     over the worker axes: device (worker i, shard s) ends up owning the i-th
-    contiguous 1/W sub-chunk of shard s's mean."""
+    contiguous 1/W sub-chunk of shard s's mean.  With a membership `mask`
+    ([W] f32) the mean runs over the participants only: absent lanes are
+    zeroed before the reduce and the divisor is |P| = Σ mask."""
     from repro.models.common import shard_map_compat
 
     wt, st = _axt(spec.worker_axes), _axt(spec.shard_axes)
 
-    def body(d):
-        s = jax.lax.psum_scatter(d, spec.worker_axes, scatter_dimension=1,
-                                 tiled=True)
-        return s / w
+    if mask is None:
+        def body(d):
+            s = jax.lax.psum_scatter(d, spec.worker_axes,
+                                     scatter_dimension=1, tiled=True)
+            return s / w
 
-    return shard_map_compat(body, spec.mesh, in_specs=P(wt, st),
-                            out_specs=P(wt, st))(x)
+        return shard_map_compat(body, spec.mesh, in_specs=P(wt, st),
+                                out_specs=P(wt, st))(x)
+
+    def body(d, m):
+        cnt = jax.lax.psum(m[0], spec.worker_axes)
+        s = jax.lax.psum_scatter(d * m[0], spec.worker_axes,
+                                 scatter_dimension=1, tiled=True)
+        return s / cnt
+
+    return shard_map_compat(body, spec.mesh, in_specs=(P(wt, st), P(wt)),
+                            out_specs=P(wt, st))(x, mask)
 
 
 def _ag_mean(spec, pending):
@@ -195,7 +233,7 @@ def _ag_mean(spec, pending):
     return out[0]
 
 
-def _rs_quantized_begin(spec, params, anchor):
+def _rs_quantized_begin(spec, params, anchor, mask=None):
     """The RS-domain quantized reduce, all dtype buckets in ONE shard_map.
 
     Per device: local delta block, shard-local partial amaxes per tensor,
@@ -203,7 +241,12 @@ def _rs_quantized_begin(spec, params, anchor):
     scale collective), int8 codes, then ONE psum_scatter per bucket carrying
     the codes in the exact accumulation dtype (`wire_dtype`).  Returns
     pending {"q": {bucket: [W, N/W] int}, "scale": {bucket: [N] f32}} — "q"
-    holds the *sum* Σq (still to be divided by W at apply time)."""
+    holds the *sum* Σq (still to be divided by W at apply time).
+
+    With a membership `mask` ([W] f32) each absent lane's delta is zeroed
+    BEFORE the amax and the quantizer: scales come from participants only,
+    absent codes are exactly 0, so the psum_scatter yields Σ_{i∈P} q_i and
+    the pending gains {"count": |P|} for the apply-time division."""
     from repro.models.common import shard_map_compat
 
     wt, st = _axt(spec.worker_axes), _axt(spec.shard_axes)
@@ -213,9 +256,11 @@ def _rs_quantized_begin(spec, params, anchor):
     w = jax.tree.leaves(params)[0].shape[0]
     wdt = wire_dtype(w)
 
-    def body(p, a, sg):
+    def body(p, a, sg, *m):
         d = {b: p[b].astype(jnp.float32) - a[b].astype(jnp.float32)[None]
              for b in buckets}
+        if m:
+            d = {b: d[b] * m[0][0] for b in buckets}
         part = jnp.concatenate(
             [partial_segment_amax(d[b], sg[b], nseg[b]) for b in buckets])
         full = jax.lax.pmax(part, spec.worker_axes + spec.shard_axes)
@@ -232,14 +277,22 @@ def _rs_quantized_begin(spec, params, anchor):
               for b in buckets}
         return qs, scales
 
-    in_specs = ({b: P(wt, st) for b in buckets},
+    in_specs = [{b: P(wt, st) for b in buckets},
                 {b: P(st) for b in buckets},
-                {b: P(st) for b in buckets})
+                {b: P(st) for b in buckets}]
     out_specs = ({b: P(wt, st) for b in buckets},
                  {b: P(st) for b in buckets})
-    qs, scales = shard_map_compat(body, spec.mesh, in_specs=in_specs,
-                                  out_specs=out_specs)(params, anchor, seg)
-    return {"q": qs, "scale": scales}
+    args = [params, anchor, seg]
+    if mask is not None:
+        in_specs.append(P(wt))
+        args.append(mask)
+    qs, scales = shard_map_compat(body, spec.mesh,
+                                  in_specs=tuple(in_specs),
+                                  out_specs=out_specs)(*args)
+    out = {"q": qs, "scale": scales}
+    if mask is not None:
+        out["count"] = jnp.sum(mask)
+    return out
 
 
 def _ag_codes(spec, qs):
@@ -479,7 +532,7 @@ def pending_specs(run_cfg, spec):
     return payload
 
 
-def make_sync_begin(run_cfg, spec=None):
+def make_sync_begin(run_cfg, spec=None, partial: bool = False):
     """First half of the sync: the reduce.  begin(state) -> pending, a pure
     function of the pre-sync state (no state mutation).
 
@@ -490,7 +543,13 @@ def make_sync_begin(run_cfg, spec=None):
     the worker axes — one reduce_scatter per dtype bucket on the wire,
     carrying integer codes when quantized — and pending stays worker-sharded
     [W, N/W] (codes as the un-divided sum Σq); the matching all_gather lives
-    in make_sync_apply (the deferrable leg)."""
+    in make_sync_apply (the deferrable leg).
+
+    partial=True: begin(state, mask) with mask [W] f32 ∈ {0,1} — the mean
+    runs over the participants only (module docstring §Partial
+    participation).  Plain/momentum pendings arrive already divided by |P|;
+    quantized pendings carry the undivided Σ_{i∈P} q_i plus {"count": |P|}
+    for the apply-time division (the exact integer-code domain)."""
     quantize = run_cfg.sync_quantize
     mom = run_cfg.outer_momentum
     wire = check_wire(run_cfg)
@@ -499,43 +558,75 @@ def make_sync_begin(run_cfg, spec=None):
         raise ValueError("sync_wire='ring-int8' needs a flat layout "
                          "(--param-layout flat | flat_sharded): the ring "
                          "chunks a bucket, not a pytree leaf")
+    if wire == "ring-int8" and partial:
+        raise ValueError("sync_wire='ring-int8' does not compose with "
+                         "partial participation: the running-mean ring "
+                         "bakes W into every hop — use wire='auto'")
 
-    def mean_w(x):
-        return _rs_mean(spec, x, x.shape[0]) if coll else jnp.mean(x, axis=0)
+    def mean_w(x, mask=None):
+        if coll:
+            return _rs_mean(spec, x, x.shape[0], mask)
+        if mask is None:
+            return jnp.mean(x, axis=0)
+        shape = (mask.shape[0],) + (1,) * (x.ndim - 1)
+        return jnp.sum(x * mask.reshape(shape), axis=0) / jnp.sum(mask)
 
-    def begin(state):
+    def begin(state, mask=None):
         params = state["params"]
         if not quantize and mom == 0.0:
             return jax.tree.map(
-                lambda p: mean_w(p.astype(jnp.float32)), params)
+                lambda p: mean_w(p.astype(jnp.float32), mask), params)
         anchor = state["anchor"]
         if wire == "ring-int8":
             return (_ring_quantized_begin(spec, params, anchor) if coll
                     else _ring_host_begin(spec, params, anchor))
         if quantize and coll:
-            return _rs_quantized_begin(spec, params, anchor)
+            return _rs_quantized_begin(spec, params, anchor, mask)
         delta = jax.tree.map(
             lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
             params, anchor)
+        if mask is not None and not coll:
+            # zero absent lanes BEFORE the scale statistic and the quantizer
+            # (the collective paths mask inside their shard_map bodies)
+            delta = jax.tree.map(
+                lambda d: d * mask.reshape((mask.shape[0],)
+                                           + (1,) * (d.ndim - 1)), delta)
         if quantize:
             if spec is None:
                 scales = jax.tree.map(
                     lambda d: _guarded_scale(jnp.max(jnp.abs(d))), delta)
             else:
-                scales = {b: flat_delta_scales(spec, b, params[b], anchor[b])
+                scales = {b: flat_delta_scales(spec, b, params[b], anchor[b],
+                                               mask)
                           for b in spec.buckets}
-            qmean = jax.tree.map(
-                lambda d, s: jnp.mean(_quantize_codes(d, s[None] if
-                                                      jnp.ndim(s) else s),
-                                      axis=0),
+            if mask is None:
+                qmean = jax.tree.map(
+                    lambda d, s: jnp.mean(_quantize_codes(d, s[None] if
+                                                          jnp.ndim(s) else s),
+                                          axis=0),
+                    delta, scales)
+                return {"q": qmean, "scale": scales}
+            qsum = jax.tree.map(
+                lambda d, s: jnp.sum(_quantize_codes(d, s[None] if
+                                                     jnp.ndim(s) else s),
+                                     axis=0),
                 delta, scales)
-            return {"q": qmean, "scale": scales}
-        return jax.tree.map(mean_w, delta)
+            return {"q": qsum, "scale": scales, "count": jnp.sum(mask)}
+        if coll:
+            return jax.tree.map(lambda d: mean_w(d, mask), delta)
+        if mask is not None:   # delta already masked above
+            return jax.tree.map(
+                lambda d: jnp.sum(d, axis=0) / jnp.sum(mask), delta)
+        return jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
 
+    if partial:
+        def begin_partial(state, mask):
+            return begin(state, mask)
+        return begin_partial
     return begin
 
 
-def make_sync_apply(run_cfg, spec=None):
+def make_sync_apply(run_cfg, spec=None, partial: bool = False):
     """Second half of the sync: gather + outer update + apply.
 
     apply(state, pending, entry_params=None) -> state.
@@ -550,11 +641,18 @@ def make_sync_apply(run_cfg, spec=None):
     all_gather over the worker axes — the deferred leg of the decomposed
     all-reduce; quantized it carries the integer code sums, divided by W and
     dequantized here (fused with the outer Nesterov + anchor update in one
-    kernels/sync_update.py `sync_apply_update` pass per bucket)."""
+    kernels/sync_update.py `sync_apply_update` pass per bucket).
+
+    partial=True pendings (make_sync_begin(..., partial=True)) carry the
+    participant count when quantized: the code sums divide by |P| =
+    pending["count"] instead of W.  The exact apply (entry_params=None)
+    still broadcasts the consensus to ALL W lanes — absent workers
+    re-anchor to consensus on rejoin."""
     quantize = run_cfg.sync_quantize
     mom = run_cfg.outer_momentum
     wire = check_wire(run_cfg)
     coll = _use_collectives(spec)
+    del partial  # pendings self-describe via their "count" entry
 
     def gather(x):
         return _ag_mean(spec, x) if coll else x
@@ -584,13 +682,17 @@ def make_sync_apply(run_cfg, spec=None):
                 step_in, scales = (_ag_ring(spec, pending) if coll else
                                    _ring_host_gather(pending, state["anchor"]))
             elif coll:
-                w = jax.tree.leaves(params)[0].shape[0]
-                qmean = {b: q.astype(jnp.float32) / w
+                div = pending.get("count")
+                if div is None:
+                    div = jax.tree.leaves(params)[0].shape[0]
+                qmean = {b: q.astype(jnp.float32) / div
                          for b, q in _ag_codes(spec, pending["q"]).items()}
                 scales = pending["scale"]
                 step_in = qmean
             else:
-                step_in = pending["q"]
+                cnt = pending.get("count")
+                step_in = (pending["q"] if cnt is None else jax.tree.map(
+                    lambda q: q / cnt, pending["q"]))
                 scales = pending["scale"]
         else:
             step_in = jax.tree.map(gather, pending)
@@ -674,3 +776,19 @@ def make_sync(run_cfg, spec=None):
         return apply_(state, begin(state))
 
     return sync_composed
+
+
+def make_sync_partial(run_cfg, spec=None):
+    """Partial-participation sync: sync(state, mask) -> state, the two
+    halves composed with a membership mask (module docstring §Partial
+    participation).  Every layout runs the composed begin/apply — there is
+    no fused partial kernel — so the mask semantics are identical across
+    tree/flat/flat_sharded, and an all-ones mask is bitwise the composed
+    blocking sync (which the flat fused kernel is proven equal to)."""
+    begin = make_sync_begin(run_cfg, spec, partial=True)
+    apply_ = make_sync_apply(run_cfg, spec, partial=True)
+
+    def sync_partial(state, mask):
+        return apply_(state, begin(state, mask))
+
+    return sync_partial

@@ -176,13 +176,16 @@ def main():
                          "into reduce_scatter + all_gather, bitwise-equal "
                          "too")
     ap.add_argument("--sync", default="blocking",
-                    choices=["blocking", "overlap"],
+                    choices=["blocking", "overlap", "partial"],
                     help="blocking: each round ends fully synced (Alg. 1/2 "
                          "verbatim); overlap: the delta reduce is issued at "
                          "the round boundary and the gather/apply deferred "
                          "past the next round's first --overlap-depth local "
                          "steps (depth 0 keeps the blocking trajectory "
-                         "bitwise)")
+                         "bitwise); partial: elastic rounds averaging over "
+                         "the engine's per-round membership mask only "
+                         "(all-present == blocking; see README §Elastic "
+                         "training)")
     ap.add_argument("--overlap-depth", type=int, default=0,
                     help="local steps the next round runs on stale params "
                          "before the deferred sync applies (--sync overlap)")

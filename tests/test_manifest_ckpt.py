@@ -1,0 +1,328 @@
+"""Sharded manifest checkpoints + checkpoint durability (checkpoint/io.py).
+
+The contract under test:
+
+  * every checkpoint file lands via tmp + fsync + os.replace + dir fsync —
+    no tmp litter, previous version intact on any failure;
+  * torn/truncated/mis-shaped checkpoints raise CheckpointError — a real
+    exception that survives `python -O` (the CI smoke leg), never a bare
+    `assert` or a silent mis-restore;
+  * `save_sharded` writes per-process shard files + a manifest naming them;
+    `restore_sharded` re-stitches the full state under any process count,
+    shard-for-shard bitwise vs the monolithic `save` of the same state;
+  * a writer killed between the shard files and the manifest (the
+    kill-during-save window) leaves the PREVIOUS checkpoint fully readable
+    — step-stamped shard filenames mean new files never clobber the ones
+    the old manifest names;
+  * the engine's manifest matrix: a manifest written by a 4-lane engine
+    restores into tree/flat/flat_sharded engines bitwise-equal to the
+    monolithic twin checkpoint;
+  * `_choose_coordinator_port` walks past a pre-bound port instead of
+    failing the spawn (the free-port probe races with the bind).
+
+The multi-process half of the matrix (write under --spawn 4, restore under
+1/2/4 processes) carries the `multiproc` marker and the usual probe-skip.
+"""
+import json
+import os
+import socket
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io as CK
+from repro.checkpoint.io import CheckpointError
+from repro.configs import registry as R
+from repro.configs.base import RunConfig
+from repro.core import engine as E
+from repro.launch import multihost
+from repro.optim.lr import make_lr_fn
+
+
+def _tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "a": jnp.asarray(rng.randn(7, 5).astype(np.float32)),
+        "b": {"c": jnp.asarray(rng.randn(11).astype(np.float32)
+                               ).astype(jnp.bfloat16),
+              "d": np.arange(6, dtype=np.int32)},
+        "step": 42,
+    }
+
+
+# ----------------------------------------------------------- durability ---
+
+def test_write_atomic_replaces_and_leaves_no_tmp(tmp_path):
+    d = str(tmp_path)
+    CK._write_atomic(d, "f.bin", b"one")
+    CK._write_atomic(d, "f.bin", b"two")
+    assert open(os.path.join(d, "f.bin"), "rb").read() == b"two"
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+
+
+def test_torn_checkpoint_raises_checkpoint_error(tmp_path):
+    """Garbage and truncated payloads both surface as CheckpointError, not
+    msgpack's zoo of exception types (or worse, a silent partial tree)."""
+    path = str(tmp_path / "ck")
+    like = _tree()
+    CK.save(path, like, step=2)
+    # torn: garbage bytes
+    with open(os.path.join(path, "state.msgpack"), "wb") as f:
+        f.write(b"\x00\xffnot-msgpack")
+    with pytest.raises(CheckpointError, match="torn or corrupt"):
+        CK.restore_with_meta(path, like)
+    # truncated: half of a valid payload
+    CK.save(path, like, step=2)
+    full = open(os.path.join(path, "state.msgpack"), "rb").read()
+    with open(os.path.join(path, "state.msgpack"), "wb") as f:
+        f.write(full[:len(full) // 2])
+    with pytest.raises(CheckpointError):
+        CK.restore_with_meta(path, like)
+
+
+def test_mismatch_raises_checkpoint_error_not_assert(tmp_path):
+    """Leaf-count and shape mismatches are real errors (python -O strips
+    asserts; the CI -O smoke leg restores through this path)."""
+    path = str(tmp_path / "ck")
+    CK.save(path, _tree(), step=0)
+    with pytest.raises(CheckpointError, match="leaves"):
+        CK.restore_with_meta(path, {"only": jnp.zeros(3)})
+    wrong = _tree()
+    wrong["a"] = jnp.zeros((7, 6), jnp.float32)
+    with pytest.raises(CheckpointError, match="shape"):
+        CK.restore_with_meta(path, wrong)
+
+
+def test_checkpoint_guards_survive_python_O(tmp_path):
+    """The -O subprocess proof: a torn checkpoint still raises under
+    stripped asserts."""
+    import subprocess
+    import sys
+    path = str(tmp_path / "ck")
+    CK.save(path, {"x": jnp.arange(4.0)}, step=0)
+    with open(os.path.join(path, "state.msgpack"), "wb") as f:
+        f.write(b"torn")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=src + os.pathsep +
+               os.environ.get("PYTHONPATH", ""))
+    code = (
+        "import jax.numpy as jnp\n"
+        "from repro.checkpoint import io as CK\n"
+        "try:\n"
+        f"    CK.restore_with_meta({path!r}, {{'x': jnp.arange(4.0)}})\n"
+        "except CK.CheckpointError:\n"
+        "    print('RAISED')\n")
+    out = subprocess.run([sys.executable, "-O", "-c", code],
+                         capture_output=True, text=True, env=env,
+                         timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "RAISED" in out.stdout
+
+
+# ------------------------------------------------------------- manifest ---
+
+def _assert_trees_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_manifest_bitwise_vs_monolithic_single_process(tmp_path):
+    """save_sharded degenerates gracefully single-process and restores
+    bitwise what save wrote — same tree, same step, same extra."""
+    tree = _tree()
+    mono, man = str(tmp_path / "mono"), str(tmp_path / "man")
+    CK.save(mono, tree, step=4, extra={"k": "v"})
+    CK.save_sharded(man, tree, step=4, extra={"k": "v"})
+    assert CK.is_manifest(man) and not CK.is_manifest(mono)
+    assert CK.read_manifest_meta(man) == (4, {"k": "v"})
+    got_m, step_m, _ = CK.restore_with_meta(mono, tree)
+    got_s, step_s, extra_s = CK.restore_sharded(man, tree)
+    assert step_m == step_s == 4 and extra_s == {"k": "v"}
+    _assert_trees_equal(got_m, got_s)
+
+
+def test_manifest_kill_during_save_leaves_previous_readable(tmp_path):
+    """A writer killed after its shard files but before the manifest (the
+    barrier raises, standing in for the kill) leaves the step-2 checkpoint
+    fully readable — step-stamped shard filenames never clobber the files
+    the old manifest names."""
+    path = str(tmp_path / "ck")
+    t2, t4 = _tree(seed=2), _tree(seed=4)
+    CK.save_sharded(path, t2, step=2)
+
+    def die():
+        raise RuntimeError("killed mid-save")
+
+    with pytest.raises(RuntimeError, match="killed"):
+        CK.save_sharded(path, t4, step=4, barrier=die)
+    got, step, _ = CK.restore_sharded(path, t2)
+    assert step == 2
+    _assert_trees_equal(got, t2)
+    # ...and a completed retry supersedes it, cleaning the orphans
+    CK.save_sharded(path, t4, step=4)
+    got, step, _ = CK.restore_sharded(path, t4)
+    assert step == 4
+    _assert_trees_equal(got, t4)
+    names = [f for f in os.listdir(path) if f.startswith("shards-")]
+    assert names and all(f.startswith("shards-00000004-")
+                         for f in names), names
+
+
+def test_manifest_missing_shard_file_raises(tmp_path):
+    path = str(tmp_path / "ck")
+    tree = _tree()
+    CK.save_sharded(path, tree, step=0)
+    for f in os.listdir(path):
+        if f.startswith("shards-"):
+            os.unlink(os.path.join(path, f))
+    with pytest.raises(CheckpointError, match="missing shard file"):
+        CK.restore_sharded(path, tree)
+
+
+def test_manifest_leaf_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ck")
+    tree = _tree()
+    CK.save_sharded(path, tree, step=0)
+    with pytest.raises(CheckpointError, match="leaves"):
+        CK.restore_sharded(path, {"only": jnp.zeros(3)})
+    wrong = dict(tree, a=jnp.zeros((7, 6), jnp.float32))
+    with pytest.raises(CheckpointError, match="shape"):
+        CK.restore_sharded(path, wrong)
+
+
+# ----------------------------------------- engine-level manifest matrix ---
+
+def _mk_engine(layout="flat_sharded", workers=4):
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = RunConfig(schedule="constant", optimizer="adamw", total_steps=8,
+                    peak_lr=3e-3, warmup_steps=1, h_base=2, remat=False,
+                    weight_decay=0.01, sync_quantize=True)
+    eng = E.RoundEngine(cfg, run, workers=workers, b_loc=2, seq=16,
+                        data="device", layout=layout, sync="partial")
+    return eng, make_lr_fn(run)
+
+
+@pytest.mark.parametrize("restore_layout", ["tree", "flat", "flat_sharded"])
+def test_engine_manifest_matrix_bitwise_vs_monolithic(tmp_path,
+                                                      restore_layout):
+    """The in-process half of the ISSUE's matrix: one engine writes both
+    the manifest and the monolithic checkpoint; engines of every layout
+    restore the manifest via restore_elastic bitwise-equal to the
+    monolithic restore."""
+    src, lr_fn = _mk_engine()
+    st = src.init_state()
+    st, _ = src.run_round(st, 0, 2, lr_fn)
+    man, mono = str(tmp_path / "man"), str(tmp_path / "mono")
+    src.save_sharded(man, st, step=2)
+    src.save(mono, st, step=2)
+
+    dst, _ = _mk_engine(layout=restore_layout)
+    like = dst.init_state()
+    got_man, step_man = dst.restore_elastic(man, like)
+    dst2, _ = _mk_engine(layout=restore_layout)
+    got_mono, step_mono = dst2.restore_elastic(mono, dst2.init_state())
+    assert step_man == step_mono == 2
+    _assert_trees_equal(got_man, got_mono)
+    assert dst.h_trace == [(0, 2)]
+
+
+# ------------------------------------------------- port-collision retry ---
+
+def test_choose_coordinator_port_walks_past_prebound_port():
+    """Satellite: the free-port probe races with the bind — a pre-bound
+    candidate must cost one retry, not the whole spawn."""
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        taken = s.getsockname()[1]
+        port = multihost._choose_coordinator_port(candidates=[taken])
+        assert port != taken
+        assert multihost._port_bindable(port)
+
+
+def test_choose_coordinator_port_exhausts_to_oserror():
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        taken = s.getsockname()[1]
+        with pytest.raises(OSError, match="no bindable coordinator port"):
+            multihost._choose_coordinator_port(
+                attempts=3, backoff=0.0, candidates=[taken] * 3)
+
+
+# -------------------------------------------------- multi-process matrix --
+
+_avail: dict = {}
+
+
+def _require_multiproc():
+    if "ok" not in _avail:
+        try:
+            res = multihost.spawn_workers(
+                2, total_devices=2, extra=("--mode", "probe"), timeout=300)
+            _avail["ok"] = all(rc == 0 for rc, _, _ in res) and all(
+                json.loads(so.strip().splitlines()[-1])["ok"]
+                for _, so, _ in res)
+            _avail["why"] = "" if _avail["ok"] else \
+                "probe failed: " + (res[0][2] or res[0][1])[-500:]
+        except Exception as e:
+            _avail["ok"], _avail["why"] = False, repr(e)
+    if not _avail["ok"]:
+        pytest.skip(f"multi-process jax backend unavailable: {_avail['why']}")
+
+
+def _elastic(nproc, workdir, *, rounds=2, start=0, lanes=4, timeout=900):
+    ex = ("--mode", "elastic", "--rounds", str(rounds),
+          "--start-round", str(start), "--workdir", workdir, "--quantize")
+    res = multihost.spawn_workers(nproc, total_devices=lanes, extra=ex,
+                                  timeout=timeout)
+    outs, hashes = [], {}
+    for rc, so, se in res:
+        assert rc == 0, f"worker failed:\n{so[-1500:]}\n{se[-3000:]}"
+        rec = json.loads(so.strip().splitlines()[-1])
+        assert rec["ok"], rec
+        outs.append(rec)
+        hashes.update(rec.get("shard_hashes") or {})
+    return outs, hashes
+
+
+@pytest.mark.multiproc
+def test_manifest_matrix_across_process_counts(tmp_path):
+    """The ISSUE's matrix, multi-process half: a manifest written under
+    --spawn 4 restores under 4, 2, and 1 processes with identical
+    full-state shard hashes (restore re-stitches under ANY process count
+    — host-side and deterministic, so bitwise is the right bar), and
+    in-process engines of all three layouts restore it bitwise-equal to a
+    monolithic re-save of the same state (shard-for-shard vs monolithic
+    under a different process count)."""
+    _require_multiproc()
+    wd4 = str(tmp_path / "w4")
+    os.makedirs(wd4)
+    # writer: 4 processes, 4 lanes, 2 rounds -> wd4/ckpt manifest (step 4)
+    _elastic(4, wd4)
+    # restore probes (zero rounds, start == rounds): 4, 2, and 1 processes
+    # must re-stitch the identical state, shard for shard
+    probes = {}
+    for nproc in (4, 2, 1):
+        _, probes[nproc] = _elastic(nproc, wd4, start=2)
+    assert probes[4] and probes[4] == probes[2] == probes[1]
+    # in-process matrix: restore the 4-proc manifest into host engines of
+    # every layout, re-save one monolithically, and prove every layout's
+    # manifest restore bitwise-equal to its monolithic restore
+    man = os.path.join(wd4, "ckpt")
+    mono = str(tmp_path / "mono")
+    src, _ = _mk_engine()
+    st, step = src.restore_elastic(man, src.init_state())
+    assert step == 4
+    src.save(mono, st, step=4)
+    for layout in ("tree", "flat", "flat_sharded"):
+        da, _ = _mk_engine(layout=layout)
+        ga, sa = da.restore_elastic(man, da.init_state())
+        db, _ = _mk_engine(layout=layout)
+        gb, sb = db.restore_elastic(mono, db.init_state())
+        assert sa == sb == 4
+        _assert_trees_equal(ga, gb)
