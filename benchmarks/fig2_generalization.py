@@ -9,10 +9,18 @@ baseline within noise while communicating a fraction as much.  The
 quantitative validation of the generalization *mechanism* (the K-times
 Slow-SDE drift of Thm 3.1) is benchmarks/sde_drift.py, which does separate
 cleanly.
+
+`--ab` runs the head-to-head the CI `controller` job gates: QSR (open-loop
+quadratic rule) vs `--schedule adaptive` (core/controller.py closing the
+loop on the same telemetry), same seed and horizon.  The adaptive run must
+match or beat QSR's held-out accuracy within noise while emitting a
+parseable controller_trace.json; the verdict JSON is the job's artifact.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +36,8 @@ from repro.optim.lr import make_lr_fn
 
 
 def train_one(schedule: str, *, steps=300, k=8, b_loc=8, seed=0,
-              alpha=0.02, beta=0.6, peak_lr=0.12):
+              alpha=0.02, beta=0.6, peak_lr=0.12, trace_path=None,
+              ctrl_cfg=None):
     cfg = dataclasses.replace(R.get_smoke_config("vit-b16"), n_classes=16)
     run = RunConfig(schedule=schedule, optimizer="sgd", total_steps=steps,
                     peak_lr=peak_lr, end_lr=1e-4, warmup_steps=steps // 10,
@@ -45,14 +54,25 @@ def train_one(schedule: str, *, steps=300, k=8, b_loc=8, seed=0,
 
     # RoundEngine owns the compile cache (one program per power-of-two H
     # bucket instead of one jit per distinct H) and the round loop unit.
+    adaptive = schedule == "adaptive"
     eng = RoundEngine(cfg, run, workers=k, b_loc=b_loc, seq=1, seed=seed,
-                      data="host", batch_fn=batch_fn)
+                      data="host", batch_fn=batch_fn,
+                      adaptive_batch=adaptive)
+    ctrl = None
+    if adaptive:
+        from repro.core.controller import AdaptiveController
+        ctrl = AdaptiveController(run, lr_fn, engine=eng, cfg=ctrl_cfg)
     state = eng.init_state(params)
     t = 0
     while t < steps:
-        h = schedules.get_h(run, t, lr_fn)
-        state, _ = eng.run_round(state, t, h, lr_fn)
+        h = (ctrl.begin_round(t) if ctrl is not None
+             else schedules.get_h(run, t, lr_fn))
+        state, m = eng.run_round(state, t, h, lr_fn)
+        if ctrl is not None:
+            ctrl.end_round(t, h, m)
         t += h
+    if ctrl is not None and trace_path:
+        ctrl.write_trace(trace_path)
 
     final = eng.params_single(state)
     # held-out accuracy (clean labels, unseen steps)
@@ -95,5 +115,60 @@ def run(csv_rows: list | None = None, *, steps=300) -> None:
     assert ok
 
 
+def run_ab(*, steps=300, trace_path="controller_trace.json",
+           out_path="fig2_ab_verdict.json") -> dict:
+    """QSR vs adaptive head-to-head (the CI `controller` gate): same seed,
+    same horizon; adaptive must match or beat QSR's held-out accuracy
+    within the same 0.02 noise band `run()` grants QSR over parallel, AND
+    its controller trace must parse against schema controller_trace/v1.
+    Writes the verdict JSON and returns it; asserts the gate."""
+    print("\n== Fig. 2 A/B: QSR (open-loop) vs adaptive (closed-loop) ==")
+    qsr_acc, qsr_sharp = train_one("qsr", steps=steps)
+    ada_acc, ada_sharp = train_one("adaptive", steps=steps,
+                                   trace_path=trace_path)
+    with open(trace_path) as f:
+        trace = json.load(f)
+    from repro.core.controller import TRACE_SCHEMA
+    assert trace["schema"] == TRACE_SCHEMA, trace["schema"]
+    assert trace["summary"]["steps"] == steps, trace["summary"]
+    ok = ada_acc >= qsr_acc - 0.02
+    verdict = {
+        "schema": "fig2_ab_verdict/v1",
+        "steps": steps,
+        "qsr": {"heldout_acc": round(qsr_acc, 4),
+                "sharpness": round(qsr_sharp, 4)},
+        "adaptive": {"heldout_acc": round(ada_acc, 4),
+                     "sharpness": round(ada_sharp, 4),
+                     "n_rounds": trace["summary"]["n_rounds"],
+                     "h_range": [trace["summary"]["h_min"],
+                                 trace["summary"]["h_max"]],
+                     "final_batch_lanes":
+                         trace["summary"]["final_batch_lanes"],
+                     "comm_fraction": trace["summary"]["comm_fraction"]},
+        "gate": "adaptive_acc >= qsr_acc - 0.02",
+        "ok": bool(ok),
+    }
+    with open(out_path, "w") as f:
+        json.dump(verdict, f, indent=1)
+    print(f"  qsr      acc {qsr_acc:6.3f}  sharp {qsr_sharp:+.4f}")
+    print(f"  adaptive acc {ada_acc:6.3f}  sharp {ada_sharp:+.4f}  "
+          f"({trace['summary']['n_rounds']} rounds, final lanes "
+          f"{trace['summary']['final_batch_lanes']})")
+    print(f"  adaptive matches/beats QSR within noise: {ok} -> {out_path}")
+    assert ok, verdict
+    return verdict
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ab", action="store_true",
+                    help="QSR vs adaptive A/B (the CI controller gate) "
+                         "instead of the full baseline sweep")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--trace", default="controller_trace.json")
+    ap.add_argument("--out", default="fig2_ab_verdict.json")
+    args = ap.parse_args()
+    if args.ab:
+        run_ab(steps=args.steps, trace_path=args.trace, out_path=args.out)
+    else:
+        run(steps=args.steps)

@@ -112,7 +112,8 @@ from repro.core import local_update as LU
 from repro.core import schedules
 from repro.core.sync import (make_sync, make_sync_apply, make_sync_begin,
                              make_sync_partial)
-from repro.data.synthetic import TokenStream, device_batch_fn, make_train_batch
+from repro.data.synthetic import (TokenStream, device_batch_fn,
+                                  effective_batch_view, make_train_batch)
 from repro.models import api, common as cm, param as pm
 
 Pytree = Any
@@ -152,6 +153,26 @@ class MembershipEpoch:
     membership: tuple[float, ...]
     resized: bool
     parked: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchEpoch:
+    """One round-boundary change of the effective per-worker batch — the
+    audit record `batch_epoch()` appends to `engine.batch_epochs` (the
+    MembershipEpoch of the batch knob).  The effective batch is a *traced*
+    lane count over the allocated [W, b_loc, ...] batch buffers
+    (data/synthetic.py effective_batch_view), so a BatchEpoch never
+    recompiles anything.
+
+    index:       epoch ordinal
+    lanes:       effective per-worker batch after the change (divides b_loc)
+    b_loc:       the allocated per-worker batch (compiled shape, unchanged)
+    round_index: rounds executed when the change landed (the boundary)
+    """
+    index: int
+    lanes: int
+    b_loc: int
+    round_index: int
 
 
 # --------------------------------------------------------------------------
@@ -239,8 +260,18 @@ def _masked_body(local_step):
     return body
 
 
+def _lane_viewer(batch_arg: bool, lanes):
+    """Per-step batch transform for the round builders: with `batch_arg`
+    the effective batch is the traced `lanes` count (a pure gather view,
+    applied inside the valid-step cond branch so masked steps skip it);
+    without, the identity."""
+    if not batch_arg:
+        return lambda b: b
+    return lambda b: effective_batch_view(b, lanes, axis=1)
+
+
 def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None,
-                        spec=None):
+                        spec=None, *, batch_arg: bool = False):
     """Padded, masked communication round.
 
     Host data:   fn(state, batches [Hp, W, B, ...], lrs [Hp], mask [Hp])
@@ -250,6 +281,14 @@ def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None,
     With `spec` (core.flat.FlatParamSpace) the state is flat dtype buckets
     end-to-end: params/opt {bucket: [W, N]}, the sync one collective per
     bucket, the telemetry one reduction per bucket.
+
+    With `batch_arg` the signature gains a trailing traced int32 scalar
+    `lanes` — the *effective* per-worker batch (adaptive-controller knob):
+    each step trains on samples [0, lanes) tiled over the allocated b_loc
+    slots (data/synthetic.py effective_batch_view — exact batch-`lanes`
+    gradients when lanes divides b_loc, bitwise pass-through at
+    lanes == b_loc), so the effective batch changes between rounds without
+    recompiling.
     """
     local_step = LU.make_local_step(cfg, run_cfg, with_metrics=True,
                                     spec=spec)
@@ -262,19 +301,21 @@ def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None,
         return sync(state), m
 
     if synth is None:
-        def round_fn(state, batches, lrs, mask):
+        def round_fn(state, batches, lrs, mask, *lanes):
+            view = _lane_viewer(batch_arg, lanes[0] if batch_arg else None)
             def step(st, xs):
                 batch, lr, valid = xs
-                return body(st, lambda: batch, lr, valid)
+                return body(st, lambda: view(batch), lr, valid)
             state, (losses, gns) = jax.lax.scan(
                 step, state, (batches, lrs, mask), unroll=cm.scan_unroll())
             return finish(state, losses, gns, mask)
     else:
-        def round_fn(state, t0, lrs, mask):
+        def round_fn(state, t0, lrs, mask, *lanes):
+            view = _lane_viewer(batch_arg, lanes[0] if batch_arg else None)
             hp = lrs.shape[0]
             def step(st, xs):
                 i, lr, valid = xs
-                return body(st, lambda: synth(t0 + i), lr, valid)
+                return body(st, lambda: view(synth(t0 + i)), lr, valid)
             state, (losses, gns) = jax.lax.scan(
                 step, state, (jnp.arange(hp), lrs, mask),
                 unroll=cm.scan_unroll())
@@ -284,7 +325,7 @@ def make_bucketed_round(cfg, run_cfg, synth: Callable | None = None,
 
 
 def make_partial_round(cfg, run_cfg, synth: Callable | None = None,
-                       spec=None):
+                       spec=None, *, batch_arg: bool = False):
     """Bucketed round whose boundary sync averages over ARRIVED workers.
 
     Host data:   fn(state, membership [W], batches [Hp,...], lrs, mask)
@@ -314,19 +355,21 @@ def make_partial_round(cfg, run_cfg, synth: Callable | None = None,
         return sync(state, membership), m
 
     if synth is None:
-        def round_fn(state, membership, batches, lrs, mask):
+        def round_fn(state, membership, batches, lrs, mask, *lanes):
+            view = _lane_viewer(batch_arg, lanes[0] if batch_arg else None)
             def step(st, xs):
                 batch, lr, valid = xs
-                return body(st, lambda: batch, lr, valid)
+                return body(st, lambda: view(batch), lr, valid)
             state, (losses, gns) = jax.lax.scan(
                 step, state, (batches, lrs, mask), unroll=cm.scan_unroll())
             return finish(state, membership, losses, gns, mask)
     else:
-        def round_fn(state, membership, t0, lrs, mask):
+        def round_fn(state, membership, t0, lrs, mask, *lanes):
+            view = _lane_viewer(batch_arg, lanes[0] if batch_arg else None)
             hp = lrs.shape[0]
             def step(st, xs):
                 i, lr, valid = xs
-                return body(st, lambda: synth(t0 + i), lr, valid)
+                return body(st, lambda: view(synth(t0 + i)), lr, valid)
             state, (losses, gns) = jax.lax.scan(
                 step, state, (jnp.arange(hp), lrs, mask),
                 unroll=cm.scan_unroll())
@@ -375,7 +418,7 @@ def make_exact_round(cfg, run_cfg, synth: Callable | None = None, spec=None):
 
 def make_overlap_round(cfg, run_cfg, synth: Callable | None = None,
                        spec=None, *, depth: int = 0,
-                       apply_pending: bool = True):
+                       apply_pending: bool = True, batch_arg: bool = False):
     """Bucketed round with the sync split across the round boundary.
 
     Host data:   fn(state, pending?, batches [Hp, ...], lrs [Hp], mask [Hp])
@@ -395,19 +438,23 @@ def make_overlap_round(cfg, run_cfg, synth: Callable | None = None,
     apply_ = make_sync_apply(run_cfg, spec=spec)
     body = _masked_body(local_step)
 
-    if synth is None:
-        def step(st, xs):
-            batch, lr, valid = xs
-            return body(st, lambda: batch, lr, valid)
-    else:
-        def step(st, xs):
-            i, lr, valid = xs
-            return body(st, lambda: synth(i), lr, valid)
-
-    def segment(state, xs):
-        return jax.lax.scan(step, state, xs, unroll=cm.scan_unroll())
-
     def round_fn(state, *args):
+        if batch_arg:
+            *args, lanes = args
+        view = _lane_viewer(batch_arg, lanes if batch_arg else None)
+
+        if synth is None:
+            def step(st, xs):
+                batch, lr, valid = xs
+                return body(st, lambda: view(batch), lr, valid)
+        else:
+            def step(st, xs):
+                i, lr, valid = xs
+                return body(st, lambda: view(synth(i)), lr, valid)
+
+        def segment(state, xs):
+            return jax.lax.scan(step, state, xs, unroll=cm.scan_unroll())
+
         if apply_pending:
             pending, *rest = args
         else:
@@ -496,7 +543,8 @@ class RoundEngine:
                  overlap_depth: int = 0, shards: int = 0,
                  mesh=None, policy: str = "dp",
                  donate: bool | None = None,
-                 batch_fn: Callable | None = None):
+                 batch_fn: Callable | None = None,
+                 adaptive_batch: bool = False):
         assert mode in ("bucketed", "legacy"), mode
         assert data in ("device", "host"), data
         assert layout in ("tree", "flat", "flat_sharded"), layout
@@ -516,6 +564,8 @@ class RoundEngine:
             "batch_fn is a host-data source; pass data='host'"
         assert cfg.family != "vision" or (data == "host" and batch_fn), \
             "vision configs need data='host' and an image batch_fn"
+        assert not adaptive_batch or mode == "bucketed", \
+            "the traced effective-batch lane rides the bucketed programs"
         self.cfg, self.run_cfg = cfg, run_cfg
         self.workers, self.b_loc, self.seq, self.seed = workers, b_loc, seq, seed
         self.mode, self.data, self.layout = mode, data, layout
@@ -528,6 +578,12 @@ class RoundEngine:
         # membership_epoch() may change either — and only between rounds.
         self.membership = np.ones(workers, np.float32)
         self.epochs: list[MembershipEpoch] = []
+        # adaptive effective batch: the compiled shape is always b_loc; the
+        # traced lane count below selects the effective batch per round
+        # (batch_epoch() is the only legal change point — a round boundary)
+        self.adaptive_batch = adaptive_batch
+        self.batch_lanes = b_loc
+        self.batch_epochs: list[BatchEpoch] = []
         # donation is a no-op warning on CPU; auto-enable elsewhere
         self.donate = (jax.default_backend() != "cpu") if donate is None else donate
         self.stream = TokenStream(vocab=max(cfg.vocab, 2), seed=seed)
@@ -620,8 +676,11 @@ class RoundEngine:
         old-W programs stay parked for an instant revert; a pure mask
         change reuses the same program (membership is a traced argument).
         Overlap mode also keys on whether a pending sync is applied — the
-        first round of a run has none."""
-        key = ((hp, apply_pending, self.workers)
+        first round of a run has none — and on the overlap depth, so a
+        controller retuning `set_overlap_depth` compiles at most one
+        program per (bucket, depth) pair.  The adaptive batch lane count
+        is a traced argument and never appears in the key."""
+        key = ((hp, apply_pending, self.overlap_depth, self.workers)
                if self.sync_mode == "overlap" else (hp, self.workers))
         if key in self._programs:
             self.cache_hits += 1
@@ -630,16 +689,19 @@ class RoundEngine:
         if self.sync_mode == "overlap":
             fn = make_overlap_round(self.cfg, self.run_cfg, self._synth,
                                     spec, depth=self.overlap_depth,
-                                    apply_pending=apply_pending)
+                                    apply_pending=apply_pending,
+                                    batch_arg=self.adaptive_batch)
             donate = (0, 1) if apply_pending else (0,)
         elif self.sync_mode == "partial":
             fn = make_partial_round(self.cfg, self.run_cfg, self._synth,
-                                    spec)
+                                    spec, batch_arg=self.adaptive_batch)
+            donate = (0,)
+        elif self.mode == "bucketed":
+            fn = make_bucketed_round(self.cfg, self.run_cfg, self._synth,
+                                     spec, batch_arg=self.adaptive_batch)
             donate = (0,)
         else:
-            make = (make_bucketed_round if self.mode == "bucketed"
-                    else make_exact_round)
-            fn = make(self.cfg, self.run_cfg, self._synth, spec)
+            fn = make_exact_round(self.cfg, self.run_cfg, self._synth, spec)
             donate = (0,)
         jit_kw = {"donate_argnums": donate} if self.donate else {}
         self._programs[key] = jax.jit(fn, **jit_kw)
@@ -682,6 +744,8 @@ class RoundEngine:
         args.append(lrs)
         if self.mode == "bucketed":
             args.append(jnp.arange(hp) < h)
+        if self.adaptive_batch:
+            args.append(jnp.int32(self.batch_lanes))
         if self.sync_mode == "partial":
             args.insert(0, jnp.asarray(self.membership, jnp.float32))
         if self.sync_mode == "overlap":
@@ -784,6 +848,44 @@ class RoundEngine:
             membership=tuple(float(x) for x in self.membership),
             resized=resize, parked=parked))
         return state
+
+    # -- adaptive round-boundary knobs -------------------------------------
+
+    def batch_epoch(self, lanes: int) -> None:
+        """The ONLY legal place the effective per-worker batch changes — a
+        round boundary, mirroring membership_epoch.  `lanes` samples are
+        consumed per step per worker from the next round on; the compiled
+        batch shape stays b_loc (the lane count is a traced argument of
+        every program — see data.synthetic.effective_batch_view), so the
+        change costs ZERO recompiles beyond the existing H-bucket set.
+        `lanes` must divide b_loc for the tiled mean to be an exact
+        batch-`lanes` gradient."""
+        if not self.adaptive_batch:
+            raise MembershipError(
+                "batch_epoch needs an adaptive_batch=True engine — the lane "
+                "count is only a traced argument of adaptive programs")
+        lanes = int(lanes)
+        if not 1 <= lanes <= self.b_loc or self.b_loc % lanes:
+            raise MembershipError(
+                f"batch lanes must divide b_loc={self.b_loc} "
+                f"(got {lanes})")
+        self.batch_lanes = lanes
+        self.batch_epochs.append(BatchEpoch(
+            index=len(self.batch_epochs), lanes=lanes, b_loc=self.b_loc,
+            round_index=len(self.h_trace)))
+
+    def set_overlap_depth(self, depth: int) -> None:
+        """Retune --overlap-depth at a round boundary (overlap engines
+        only).  Depth is a compile-cache key component, so each (bucket,
+        depth) pair compiles at most once and revisited depths are cache
+        hits."""
+        if self.sync_mode != "overlap":
+            raise MembershipError(
+                "overlap depth is only a knob under --sync overlap")
+        depth = int(depth)
+        if depth < 0:
+            raise MembershipError(f"overlap depth must be >= 0, got {depth}")
+        self.overlap_depth = depth
 
     def _resize_lanes(self, state: Pytree, lanes: list[int]) -> Pytree:
         """Re-pad the worker axis to `lanes` (source lane per new slot),

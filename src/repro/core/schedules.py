@@ -15,6 +15,14 @@ Related-work baselines (paper §A — optimization-perspective schedules):
   dec_sqrt    H ~ H0/sqrt(1 + t/T)  (start infrequent, sync more as loss
               curvature grows)                               (Wang&Joshi 19)
 
+Beyond the paper:
+  adaptive  open-loop it is the QSR prior exactly; at run time
+            core/controller.py AdaptiveController multiplies the prior by a
+            divergence correction and co-schedules the effective batch and
+            overlap depth from the engine's in-graph telemetry.  get_h here
+            returns only the prior so the schedule stays a pure function of
+            (run_cfg, t, lr) — every boundary rule below applies unchanged.
+
 All schedules implement the paper's two boundary rules:
   * warmup: H is pinned to the value of the first post-warmup round (§2),
   * truncation: the last round is forced to end at T (H = T - t).
@@ -31,7 +39,7 @@ LrFn = Callable[[int], float]
 # list so a new schedule can't be added in one place and forgotten elsewhere.
 SCHEDULE_KINDS: tuple[str, ...] = (
     "qsr", "constant", "parallel", "postlocal", "inverse", "cubic", "swap",
-    "linear_inc", "dec_sqrt",
+    "linear_inc", "dec_sqrt", "adaptive",
 )
 
 
@@ -55,7 +63,9 @@ def get_h(run_cfg, t: int, lr_fn: LrFn) -> int:
         h = 1
     elif kind == "constant":
         h = run_cfg.h_base
-    elif kind == "qsr":
+    elif kind in ("qsr", "adaptive"):
+        # "adaptive" shares the QSR prior; the closed-loop correction lives
+        # in core/controller.py and never reaches this pure function
         h = max(run_cfg.h_base, int((run_cfg.alpha / eta) ** 2))
     elif kind == "inverse":
         h = max(run_cfg.h_base, int(run_cfg.beta / eta))

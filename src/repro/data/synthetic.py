@@ -76,6 +76,26 @@ class VisionStream:
         return jnp.asarray(x), jnp.asarray(y, jnp.int32)
 
 
+def effective_batch_view(batch, lanes, axis: int = 1):
+    """Batch-size-as-a-traced-argument: view `batch` (leaves [..., B, ...]
+    with the per-worker batch at `axis`) as an *effective* batch of `lanes`
+    samples without changing any array shape — samples [0, lanes) are tiled
+    to fill the B slots (`idx = arange(B) % lanes`), so when `lanes`
+    divides B the mean loss and gradient are EXACTLY those of a
+    batch-`lanes` step (each distinct sample weighted B/lanes times, the
+    weights cancel in the mean).  `lanes` may be a traced int32 scalar:
+    changing the effective batch between rounds recompiles nothing — the
+    knob the adaptive controller (core/controller.py) rides.  With
+    lanes == B the index is the identity and the gather is a bitwise
+    pass-through."""
+    def take(x):
+        if x.ndim <= axis:
+            return x
+        idx = jnp.arange(x.shape[axis]) % lanes
+        return jnp.take(x, idx, axis=axis)
+    return jax.tree.map(take, batch)
+
+
 def device_batch_fn(cfg, stream: TokenStream, w: int, b_loc: int, seq: int):
     """Jittable on-device batch synthesis: `synth(step) -> batch [W, B, ...]`.
 

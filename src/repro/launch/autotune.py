@@ -9,7 +9,7 @@ os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
 For one (mesh, policy) this module enumerates candidate sync *plans* —
     wire   ∈ {f32 (unquantized), int-codes (exact Σq in wire_dtype(W)),
               ring-int8 (re-quantizing ppermute ring)}
-    sync   ∈ {blocking, overlap depth 1}
+    sync   ∈ {blocking, overlap depth 1, overlap depth 2}
 — and scores each on three measured axes:
 
   * bytes_on_wire — parsed from the optimized HLO of the lowered sync
@@ -33,8 +33,12 @@ interconnect, wall-clock breaks ties between plans that move the same bytes
 (e.g. ring+blocking vs ring+overlap).
 
 The emitted record (BENCH_sync.json, schema "bench_sync/v1", README §Perf
-trajectory) is the repo's perf trajectory point; `--baseline` gates a run
-against the committed benchmarks/bench_sync_baseline.json:
+trajectory) is the repo's perf trajectory point; `--append FILE` collects
+points from several (mesh, policy) legs of one CI run into a single
+trajectory file (schema "bench_sync_trajectory/v1": {"points": [rec, ...]})
+— the CI `bench` job appends the dp 4x2 and fsdp 2x2x2 pod-mesh points.
+`--baseline` gates a run against the committed
+benchmarks/bench_sync_baseline.json:
 
   * bytes_on_wire of the chosen plan must not grow,
   * the chosen plan's s/round RATIO to the in-run f32+blocking reference
@@ -66,7 +70,11 @@ SCHEMA = "bench_sync/v1"
 WIRES = (("f32", False, "auto"),
          ("int-codes", True, "auto"),
          ("ring-int8", True, "ring-int8"))
-SYNCS = (("blocking", 0), ("overlap", 1))
+# joint overlap-depth enumeration: depth 0 IS blocking (bitwise), deeper
+# depths trade staleness for hidden gather time — the same frontier the
+# adaptive controller (core/controller.py) rides at run time
+SYNCS = (("blocking", 0), ("overlap", 1), ("overlap", 2))
+TRAJECTORY_SCHEMA = "bench_sync_trajectory/v1"
 
 
 def _wire_dtype_name(wire_name: str, w: int) -> str:
@@ -383,6 +391,11 @@ def main() -> None:
                          "and the speed gate is skipped)")
     ap.add_argument("--out", default=None,
                     help="write the BENCH_sync.json record here")
+    ap.add_argument("--append", default=None,
+                    help="append this run's record as a point to a "
+                         "trajectory file (schema bench_sync_trajectory/v1; "
+                         "created if missing, a bare bench_sync/v1 record "
+                         "is promoted to a one-point trajectory)")
     ap.add_argument("--baseline", default=None,
                     help="gate this run against a committed baseline "
                          "record; non-zero exit on violation")
@@ -419,6 +432,20 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as f:
             f.write(text)
+    if args.append:
+        traj = {"schema": TRAJECTORY_SCHEMA, "points": []}
+        if os.path.exists(args.append):
+            with open(args.append) as f:
+                prev = json.load(f)
+            if prev.get("schema") == TRAJECTORY_SCHEMA:
+                traj = prev
+            elif prev.get("schema") == SCHEMA:
+                traj["points"].append(prev)
+        traj["points"].append(rec)
+        with open(args.append, "w") as f:
+            json.dump(traj, f, indent=1)
+        print(f"trajectory: {len(traj['points'])} points -> {args.append}",
+              file=sys.stderr)
     print(text)
     if args.baseline and args.update_baseline:
         with open(args.baseline, "w") as f:

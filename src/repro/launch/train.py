@@ -34,7 +34,8 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
           layout: str = "tree", sync: str = "blocking",
           overlap_depth: int = 0, eval_fn=None,
           async_observer: bool = False,
-          eng: RoundEngine | None = None):
+          eng: RoundEngine | None = None,
+          controller_trace: str | None = None, frontier=None):
     """Run a full training run; returns (state, history).
 
     history rows are (t_end, h, loss, lr) — unchanged from the pre-engine
@@ -43,6 +44,16 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
     one is built from the `engine`/`data`/`layout`/`sync` mode flags.
     With sync="overlap" the in-flight reduce is flushed at checkpoints and
     before returning, so the returned state is always the synced consensus.
+
+    schedule="adaptive" swaps the open-loop `schedules.get_h` walk for a
+    core/controller.py AdaptiveController around every round: H gets a
+    divergence correction on top of the QSR prior, the effective per-worker
+    batch grows through zero-recompile `batch_epoch`s (engines built with
+    `adaptive_batch=True` — automatic here under the bucketed engine), and
+    with sync="overlap" + a `frontier` ({depth: s/round} dict or a
+    table4_walltime JSON path) the overlap depth rides the walltime
+    frontier.  `controller_trace` names a JSON file to persist the
+    per-round decision stream (schema controller_trace/v1).
 
     async_observer=True moves eval and mid-run checkpoints off the round
     loop: the engine's synced_view (pure — the overlap pipeline is
@@ -53,11 +64,13 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
     from the consensus view WITHOUT forcing a sync point; the final
     checkpoint is still written synchronously after the run's flush.
     """
+    adaptive = run_cfg.schedule == "adaptive"
     if eng is None:
         eng = RoundEngine(cfg, run_cfg, workers=workers, b_loc=b_loc,
                           seq=seq, seed=seed, mode=engine, data=data,
                           layout=layout, sync=sync,
-                          overlap_depth=overlap_depth)
+                          overlap_depth=overlap_depth,
+                          adaptive_batch=adaptive and engine == "bucketed")
     else:
         got = (eng.cfg, eng.run_cfg, eng.workers, eng.b_loc, eng.seq,
                eng.seed, eng.mode, eng.data, eng.layout, eng.sync_mode,
@@ -70,6 +83,14 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
             f"train() called with {want}"
     state = eng.init_state()
     lr_fn = make_lr_fn(run_cfg)
+
+    ctrl = None
+    if adaptive:
+        from repro.core.controller import AdaptiveController, load_frontier
+        if isinstance(frontier, str):
+            frontier = load_frontier(frontier)
+        ctrl = AdaptiveController(run_cfg, lr_fn, engine=eng,
+                                  frontier=frontier)
 
     step0 = 0
     if ckpt_dir and ckpt_io.exists(ckpt_dir):
@@ -98,8 +119,11 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
     t_start = time.time()
     t = saved_at = step0
     while t < run_cfg.total_steps:
-        h = schedules.get_h(run_cfg, t, lr_fn)
+        h = (ctrl.begin_round(t) if ctrl is not None
+             else schedules.get_h(run_cfg, t, lr_fn))
         state, m = eng.run_round(state, t, h, lr_fn)
+        if ctrl is not None:
+            ctrl.end_round(t, h, m)
         t += h
         loss = float(m["loss"])
         history.append((t, h, loss, lr_fn(t - 1)))
@@ -145,6 +169,10 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
         observer.close()
     if ckpt_dir and saved_at != t:
         eng.save(ckpt_dir, state, step=t)
+    if ctrl is not None and controller_trace:
+        ctrl.write_trace(controller_trace)
+        print(f"controller trace ({len(ctrl.trace)} rounds) -> "
+              f"{controller_trace}")
     return state, history
 
 
@@ -216,6 +244,15 @@ def main():
                          "auto = exact int16/int32 code-sums; ring-int8 = "
                          "re-quantizing int8 ppermute ring (needs "
                          "--param-layout flat|flat_sharded)")
+    ap.add_argument("--controller-trace", default=None,
+                    help="--schedule adaptive: JSON path for the per-round "
+                         "controller decision stream (schema "
+                         "controller_trace/v1; README §Adaptive controller)")
+    ap.add_argument("--frontier", default=None,
+                    help="--schedule adaptive + --sync overlap: "
+                         "table4_walltime JSON whose measured s/round rows "
+                         "give the overlap-depth walltime frontier the "
+                         "controller chooses depth on")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8, help="per-worker batch")
@@ -244,12 +281,16 @@ def main():
                       seq=args.seq, mode=args.engine, data=args.data,
                       layout=args.param_layout, sync=args.sync,
                       overlap_depth=args.overlap_depth,
-                      mesh=mesh, policy=args.policy)
+                      mesh=mesh, policy=args.policy,
+                      adaptive_batch=(args.schedule == "adaptive"
+                                      and args.engine == "bucketed"))
     state, hist = train(cfg, run_cfg, workers=args.workers, b_loc=args.batch,
                         seq=args.seq, ckpt_dir=args.ckpt, engine=args.engine,
                         data=args.data, layout=args.param_layout,
                         sync=args.sync, overlap_depth=args.overlap_depth,
-                        async_observer=args.async_observer, eng=eng)
+                        async_observer=args.async_observer, eng=eng,
+                        controller_trace=args.controller_trace,
+                        frontier=args.frontier)
     losses = [l for _, _, l, _ in hist]
     if not losses:
         print("nothing to do: checkpoint already at "

@@ -1,0 +1,380 @@
+"""Adaptive controller (core/controller.py): pure decision invariants
+(warmup pin, truncation, correction direction, batch ratchet, depth
+frontier), the engine-side knobs (`batch_epoch` zero-recompile contract,
+`set_overlap_depth` cache axis), the deterministic controller-trace
+regression, and — under the `controller` marker (own CI job, excluded from
+tier-1) — the fig2 QSR-vs-adaptive A/B gate."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.configs.base import RunConfig
+from repro.core import engine as E
+from repro.core import schedules
+from repro.core.controller import (AdaptiveController, ControllerConfig,
+                                   TRACE_SCHEMA, load_frontier)
+from repro.optim.lr import make_lr_fn
+
+
+def _run_cfg(**kw):
+    base = dict(schedule="adaptive", optimizer="adamw", total_steps=24,
+                peak_lr=3e-3, end_lr=1e-6, warmup_steps=2, h_base=2,
+                alpha=0.001, remat=False, weight_decay=0.01)
+    base.update(kw)
+    return RunConfig(**base)
+
+
+def _drive(ctrl, metrics_fn, total):
+    """Walk the controller over a full run with fabricated telemetry."""
+    t, rows = 0, []
+    while t < total:
+        h = ctrl.begin_round(t)
+        ctrl.end_round(t, h, metrics_fn(t, h))
+        rows.append((t, h))
+        t += h
+    return rows
+
+
+def _flat_metrics(scale=1.0, run=None, lr_fn=None):
+    """Telemetry with constant drift intensity kappa: divergence follows
+    the SDE scaling kappa * eta * sqrt(h) exactly (eta folded in when a
+    schedule is given), so the controller's feedback sees a steady
+    signal."""
+    def eta(t):
+        return (lr_fn(max(t, run.warmup_steps))
+                if run is not None and lr_fn is not None else 1.0)
+    return lambda t, h: {"loss": 5.0 - 0.01 * t, "grad_norm": 1.0,
+                         "divergence": scale * 0.01 * eta(t) * np.sqrt(h)}
+
+
+# ------------------------------------------------------ pure H decisions --
+
+def test_adaptive_prior_is_qsr():
+    """Open-loop, "adaptive" IS the quadratic rule: get_h agrees with kind
+    qsr at every step, so every SCHEDULE_KINDS-parametrized invariant
+    (partition, warmup pin) transfers for free."""
+    ra = _run_cfg(total_steps=500, warmup_steps=50)
+    rq = _run_cfg(schedule="qsr", total_steps=500, warmup_steps=50)
+    lr = make_lr_fn(ra)
+    for t in range(0, 500, 7):
+        assert schedules.get_h(ra, t, lr) == schedules.get_h(rq, t, lr)
+
+
+def test_controller_partitions_and_pins_warmup():
+    run = _run_cfg(total_steps=400, warmup_steps=80, h_base=3)
+    lr = make_lr_fn(run)
+    ctrl = AdaptiveController(run, lr)
+    rows = _drive(ctrl, _flat_metrics(), run.total_steps)
+    assert sum(h for _, h in rows) == run.total_steps
+    assert all(h >= 1 for _, h in rows)
+    pinned = schedules.get_h(run, run.warmup_steps, lr)
+    for t, h in rows:
+        if t + h <= run.warmup_steps:
+            assert h == pinned, (t, h)
+        rec = next(r for r in ctrl.trace if r["t"] == t)
+        if t < run.warmup_steps:
+            assert "warmup-pin" in rec["reasons"]
+            assert rec["h_correction"] == 1.0
+
+
+def test_controller_rejects_non_adaptive_run_cfg():
+    run = _run_cfg(schedule="qsr")
+    with pytest.raises(ValueError):
+        AdaptiveController(run, make_lr_fn(run))
+
+
+def test_round_boundary_pairing_enforced():
+    run = _run_cfg()
+    ctrl = AdaptiveController(run, make_lr_fn(run))
+    with pytest.raises(RuntimeError):
+        ctrl.end_round(0, 2, {"loss": 1.0, "divergence": 0.1})
+    ctrl.begin_round(0)
+    with pytest.raises(RuntimeError):   # mid-round re-decision is illegal
+        ctrl.begin_round(0)
+
+
+def test_divergence_correction_direction():
+    """Hot divergence (vs its own trend) shrinks H below the prior; a cool
+    stretch extends it — and the correction stays inside the clip bounds."""
+    run = _run_cfg(total_steps=4000, warmup_steps=100, h_base=1,
+                   alpha=0.05)   # prior >> h_base so shrink is visible
+    lr = make_lr_fn(run)
+
+    def run_with(late_scale):
+        ctrl = AdaptiveController(run, lr)
+        flat = _flat_metrics(run=run, lr_fn=lr)
+        shifted = _flat_metrics(late_scale, run=run, lr_fn=lr)
+        t = 0
+        while t < run.total_steps:
+            h = ctrl.begin_round(t)
+            m = (flat if t <= run.total_steps // 2 else shifted)(t, h)
+            ctrl.end_round(t, h, m)
+            t += h
+        return ctrl
+
+    lo, hi = ControllerConfig().h_correction_bounds
+    mid = run.total_steps // 2
+    # the correction bites while the fast EMA has moved off the trend —
+    # rounds deciding on post-switch telemetry; once both EMAs converge to
+    # the new level the ratio returns to ~1 (the trend recalibrates)
+    window = lambda c: [r for r in c.trace if r["t"] > mid]
+    hot = run_with(8.0)
+    assert any(r["h_correction"] < 1.0 for r in window(hot))
+    cool = run_with(1.0 / 8.0)
+    assert any(r["h_correction"] > 1.0 for r in window(cool))
+    for ctrl in (hot, cool):
+        assert all(lo <= r["h_correction"] <= hi for r in ctrl.trace)
+        for r in ctrl.trace:     # floor + truncation hold under correction
+            assert r["h"] >= 1
+            assert r["t"] + r["h"] <= run.total_steps
+
+
+def test_steady_run_stays_near_prior():
+    """The trend-tracking reference means a smooth run barely deviates from
+    the QSR prior — the controller refines the rule, it does not fight it."""
+    run = _run_cfg(total_steps=2000, warmup_steps=100, alpha=0.02)
+    lr = make_lr_fn(run)
+    ctrl = AdaptiveController(run, lr)
+    _drive(ctrl, _flat_metrics(run=run, lr_fn=lr), run.total_steps)
+    for r in ctrl.trace:
+        assert 0.5 <= r["h_correction"] <= 2.0, r
+
+
+# ----------------------------------------------------------- batch knob ---
+
+class _StubEngine:
+    """The three attributes/methods the controller drives, no XLA."""
+
+    def __init__(self, b_loc=8, sync_mode="blocking", adaptive_batch=True):
+        self.b_loc, self.sync_mode = b_loc, sync_mode
+        self.adaptive_batch = adaptive_batch
+        self.batch_lanes = b_loc
+        self.overlap_depth = 0
+        self.calls = []
+
+    def batch_epoch(self, lanes):
+        self.calls.append(("batch", lanes))
+        self.batch_lanes = lanes
+
+    def set_overlap_depth(self, depth):
+        self.calls.append(("depth", depth))
+        self.overlap_depth = depth
+
+
+def test_batch_ratchet_monotone_divisors():
+    run = _run_cfg(total_steps=3000, warmup_steps=100, alpha=0.02)
+    eng = _StubEngine(b_loc=8)
+    ctrl = AdaptiveController(run, make_lr_fn(run), engine=eng)
+    # loss plateaus after warmup -> improvement EMA decays -> batch grows
+    _drive(ctrl, lambda t, h: {
+        "loss": 5.0 - min(0.002 * t, 0.5), "grad_norm": 1.0,
+        "divergence": 0.01 * np.sqrt(h)}, run.total_steps)
+    lanes = [r["batch_lanes"] for r in ctrl.trace]
+    assert lanes == sorted(lanes), "batch is a ratchet — never shrinks"
+    assert lanes[0] == 4          # b_loc / batch_start_div
+    assert lanes[-1] == 8         # grew to the allocated batch
+    assert all(8 % l == 0 for l in lanes)
+    assert ("batch", 8) in eng.calls
+    assert any("batch-grow" in r["reasons"] for r in ctrl.trace)
+
+
+# ----------------------------------------------------------- depth knob ---
+
+def test_depth_rides_frontier_within_staleness_budget():
+    run = _run_cfg(total_steps=3000, warmup_steps=100, alpha=0.02)
+    frontier = {0: 1.0, 1: 0.6, 2: 0.5}   # deeper overlap is faster
+    lr = make_lr_fn(run)
+    eng = _StubEngine(sync_mode="overlap", adaptive_batch=False)
+    ctrl = AdaptiveController(run, lr, engine=eng, frontier=frontier)
+    flat = _flat_metrics(run=run, lr_fn=lr)
+    hot = _flat_metrics(8.0, run=run, lr_fn=lr)   # drift above trend
+    mid, t = run.total_steps // 2, 0
+    while t < run.total_steps:
+        h = ctrl.begin_round(t)
+        ctrl.end_round(t, h, (flat if t <= mid else hot)(t, h))
+        t += h
+    # depth holds at 0 until the feedback signals exist
+    assert ctrl.trace[0]["overlap_depth"] == 0
+    assert "depth-hold-calibrating" in ctrl.trace[0]["reasons"]
+    # steady drift on long rounds: the fastest frontier depth is affordable
+    steady = [r for r in ctrl.trace if 0 < r["t"] <= mid]
+    assert any(r["overlap_depth"] == 2 for r in steady)
+    assert ("depth", 2) in eng.calls
+    # drift jumps above its own trend -> the staleness budget retreats
+    after = [r for r in ctrl.trace if r["t"] > mid]
+    assert any(r["overlap_depth"] == 0 for r in after)
+    # a short truncated final round can never afford staleness
+    assert ctrl.trace[-1]["h"] > 16 or ctrl.trace[-1]["overlap_depth"] == 0
+
+
+def test_load_frontier_table4_and_plain():
+    recs = {"overlap": {"blocking_d0": {"s_per_round": 2.8},
+                        "overlap_d1": {"s_per_round": 2.1},
+                        "overlap_d1_ring": {"s_per_round": 9.9}}}
+    assert load_frontier(recs) == {0: 2.8, 1: 2.1}
+    assert load_frontier({"0": 1.0, "2": 0.5}) == {0: 1.0, 2: 0.5}
+    assert load_frontier("/nonexistent/path.json") is None
+
+
+# ------------------------------------------------- engine integration -----
+
+def _engine(run, layout="tree", sync="blocking", **kw):
+    cfg = R.get_smoke_config("starcoder2-3b")
+    shards = {"flat_sharded": 2}.get(layout, 0)
+    return E.RoundEngine(cfg, run, workers=2, b_loc=4, seq=16,
+                         mode="bucketed", data="device", layout=layout,
+                         sync=sync, shards=shards, adaptive_batch=True, **kw)
+
+
+def _adaptive_run(layout="tree", sync="blocking", **ctrl_kw):
+    run = _run_cfg()
+    eng = _engine(run, layout=layout, sync=sync)
+    lr_fn = make_lr_fn(run)
+    ctrl = AdaptiveController(run, lr_fn, engine=eng, **ctrl_kw)
+    state, t = eng.init_state(), 0
+    while t < run.total_steps:
+        h = ctrl.begin_round(t)
+        state, m = eng.run_round(state, t, h, lr_fn)
+        ctrl.end_round(t, h, m)
+        t += h
+    state = eng.flush(state)
+    return eng, ctrl, state
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat", "flat_sharded"])
+def test_adaptive_zero_recompiles_beyond_bucket_set(layout):
+    """THE acceptance criterion: an adaptive run — batch epochs included —
+    compiles exactly one program per visited power-of-two H bucket, the
+    same budget a non-adaptive run pays.  The lane count is a traced
+    argument, never a cache key."""
+    eng, ctrl, _ = _adaptive_run(layout=layout)
+    buckets = {E.bucket_pow2(h) for _, h in eng.h_trace}
+    assert eng.compiles == len(buckets), (eng.compile_stats(), eng.h_trace)
+    assert eng.batch_epochs, "the controller should have moved the batch"
+    assert sum(h for _, h in eng.h_trace) == eng.run_cfg.total_steps
+
+
+def test_batch_epochs_land_on_round_boundaries():
+    eng, ctrl, _ = _adaptive_run()
+    n_rounds = len(eng.h_trace)
+    for ep in eng.batch_epochs:
+        assert 0 <= ep.round_index <= n_rounds
+        assert ep.b_loc % ep.lanes == 0
+    # trace rows mirror the engine's audit trail
+    assert [r["batch_lanes"] for r in ctrl.trace][0] == \
+        eng.batch_epochs[0].lanes
+
+
+def test_full_lane_adaptive_is_bitwise_plain():
+    """With lanes == b_loc the gather index is the identity: an adaptive
+    engine pinned at full batch is bitwise the plain engine."""
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = _run_cfg(schedule="qsr")
+    lr_fn = make_lr_fn(run)
+    ea = E.RoundEngine(cfg, run, workers=2, b_loc=4, seq=16,
+                       mode="bucketed", data="device", adaptive_batch=True)
+    ep = E.RoundEngine(cfg, run, workers=2, b_loc=4, seq=16,
+                       mode="bucketed", data="device")
+    sa, sp = ea.init_state(), ep.init_state()
+    for t, h in schedules.rounds(run, lr_fn):
+        sa, _ = ea.run_round(sa, t, h, lr_fn)
+        sp, _ = ep.run_round(sp, t, h, lr_fn)
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sp)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batch_epoch_validation():
+    run = _run_cfg()
+    eng = _engine(run)
+    for bad in (0, 3, 5, 8):
+        with pytest.raises(E.MembershipError):
+            eng.batch_epoch(bad)
+    plain = E.RoundEngine(R.get_smoke_config("starcoder2-3b"), run,
+                          workers=2, b_loc=4, seq=16, mode="bucketed",
+                          data="device")
+    with pytest.raises(E.MembershipError):
+        plain.batch_epoch(2)
+    with pytest.raises(E.MembershipError):
+        plain.set_overlap_depth(1)   # blocking engines have no depth knob
+
+
+def test_overlap_depth_is_a_cache_axis():
+    """Depth changes compile at most one program per (bucket, depth) and
+    revisiting a depth is a cache hit."""
+    run = _run_cfg(total_steps=16, h_base=4, schedule="constant")
+    cfg = R.get_smoke_config("starcoder2-3b")
+    eng = E.RoundEngine(cfg, run, workers=2, b_loc=4, seq=16,
+                        mode="bucketed", data="device", sync="overlap",
+                        overlap_depth=1)
+    lr_fn = make_lr_fn(run)
+    state = eng.init_state()
+    state, _ = eng.run_round(state, 0, 4, lr_fn)     # depth 1, no pending
+    eng.set_overlap_depth(2)
+    state, _ = eng.run_round(state, 4, 4, lr_fn)     # depth 2 + pending
+    eng.set_overlap_depth(1)
+    state, _ = eng.run_round(state, 8, 4, lr_fn)     # depth 1 + pending
+    c = eng.compiles
+    eng.set_overlap_depth(2)
+    state, _ = eng.run_round(state, 12, 4, lr_fn)    # revisit: cache hit
+    assert eng.compiles == c and eng.cache_hits >= 1
+    eng.flush(state)
+
+
+# --------------------------------------------------- trace regression -----
+
+def test_controller_trace_deterministic_regression():
+    """Same seed, same config -> byte-identical trace JSON, and the record
+    carries the v1 schema with per-round decisions + measured telemetry."""
+    a = _adaptive_run()[1].trace_record()
+    b = _adaptive_run()[1].trace_record()
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    assert a["schema"] == TRACE_SCHEMA
+    assert a["summary"]["steps"] == 24
+    assert a["summary"]["n_rounds"] == len(a["rounds"])
+    for row in a["rounds"]:
+        assert {"t", "h", "h_prior", "h_correction", "batch_lanes",
+                "overlap_depth", "lr", "signals", "reasons",
+                "measured"} <= set(row)
+        assert np.isfinite(row["measured"]["loss"])
+
+
+def test_train_driver_writes_trace(tmp_path):
+    from repro.launch.train import train
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = _run_cfg()
+    path = str(tmp_path / "controller_trace.json")
+    train(cfg, run, workers=2, b_loc=4, seq=16, log_every=0,
+          controller_trace=path)
+    with open(path) as f:
+        rec = json.load(f)
+    assert rec["schema"] == TRACE_SCHEMA
+    assert rec["summary"]["steps"] == run.total_steps
+
+
+# ------------------------------------------------------- CI A/B smoke -----
+
+@pytest.mark.controller
+def test_fig2_ab_gate(tmp_path):
+    """The CI `controller` job's gate: adaptive matches or beats QSR's
+    held-out accuracy within noise while emitting a parseable trace.
+    REPRO_CONTROLLER_ARTIFACTS names a directory to drop the trace +
+    verdict into (the CI job uploads it); defaults to the test tmpdir."""
+    import os
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    import fig2_generalization as fig2
+    art = os.environ.get("REPRO_CONTROLLER_ARTIFACTS")
+    outdir = pathlib.Path(art) if art else tmp_path
+    outdir.mkdir(parents=True, exist_ok=True)
+    verdict = fig2.run_ab(
+        steps=300,   # the benchmark's native horizon (fig2 run() default)
+        trace_path=str(outdir / "controller_trace.json"),
+        out_path=str(outdir / "fig2_ab_verdict.json"))
+    assert verdict["ok"]
+    with open(outdir / "controller_trace.json") as f:
+        assert json.load(f)["schema"] == TRACE_SCHEMA

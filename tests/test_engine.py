@@ -71,6 +71,32 @@ def test_every_schedule_pins_h_during_warmup(kind):
         assert schedules.get_h(run, t, lr) == pinned, (kind, t)
 
 
+def test_adaptive_kind_registered_and_boundary_only():
+    """The "adaptive" kind rides every SCHEDULE_KINDS-parametrized
+    invariant above (partition, warmup pin) because open-loop it IS the
+    QSR prior; its run-time knobs move only through round-boundary audit
+    records — BatchEpoch for the traced batch lane count, the compile-key
+    depth axis for overlap — never mid-round (run_round is atomic)."""
+    assert "adaptive" in schedules.SCHEDULE_KINDS
+    ra = _run_cfg(schedule="adaptive", total_steps=500, warmup_steps=50)
+    rq = _run_cfg(schedule="qsr", total_steps=500, warmup_steps=50)
+    lr = make_lr_fn(ra)
+    assert schedules.h_trace(ra, lr) == schedules.h_trace(rq, lr)
+
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = _run_cfg(schedule="adaptive")
+    eng = E.RoundEngine(cfg, run, workers=2, b_loc=4, seq=16,
+                        mode="bucketed", data="device", adaptive_batch=True)
+    lr_fn = make_lr_fn(run)
+    state = eng.init_state()
+    state, _ = eng.run_round(state, 0, 2, lr_fn)
+    eng.batch_epoch(2)                    # at a round boundary: legal
+    ep = eng.batch_epochs[-1]
+    assert (ep.round_index, ep.lanes, ep.b_loc) == (1, 2, 4)
+    state, m = eng.run_round(state, 2, 2, lr_fn)
+    assert np.isfinite(float(m["loss"]))
+
+
 # ------------------------------------------------- bucketed == legacy -----
 
 def test_bucketed_rounds_bitwise_match_legacy():
