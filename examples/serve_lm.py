@@ -1,5 +1,8 @@
 """Serve a small model with batched requests: prefill + decode, including
-the sliding-window ring cache used by the long_500k dry-run shape.
+the sliding-window ring cache used by the long_500k dry-run shape, then the
+continuous-batching service loop with a hot weight swap mid-sequence
+(requests keep decoding while new weights are published and swapped in
+between decode steps — every emitted token stamped with its swap epoch).
 
   PYTHONPATH=src python examples/serve_lm.py --arch gemma3-4b
 """
@@ -50,6 +53,39 @@ def main():
     print(f"ring window  : {args.batch}x{args.gen} tokens in {t_ring:.2f}s "
           f"(matches full-cache within window: {same})")
     print("sample:", np.asarray(full[0, args.prompt_len:]).tolist())
+
+    # --- continuous batching + hot weight swap --------------------------
+    # Three requests over two decode slots; after a few steps a "trainer"
+    # publishes fresh weights which the batcher swaps in between decode
+    # steps.  In-flight sequences are refreshed (replayed under the new
+    # weights), so their remaining tokens are bitwise what a server
+    # restarted from that checkpoint would emit.
+    from repro.launch.batching import ContinuousBatcher, Request
+    from repro.launch.weights import ServingWeights, WeightSubscriber
+
+    fresh = pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(17))
+    sub = WeightSubscriber()
+    batcher = ContinuousBatcher(cfg, ServingWeights(cfg, params),
+                                slots=2, max_len=args.prompt_len + args.gen,
+                                subscriber=sub)
+    reqs = [Request(rid=i, prompt=np.asarray(prompts[i % args.batch]),
+                    max_new=args.gen) for i in range(3)]
+    for r in reqs:
+        batcher.submit(r)
+    t0 = time.time()
+    steps = 0
+    while batcher.step() or batcher.queue:
+        steps += 1
+        if steps == args.prompt_len + 4:   # mid-sequence: publish new weights
+            sub.publish(1, fresh)
+    t_srv = time.time() - t0
+    toks = sum(len(r.out) for r in reqs)
+    print(f"service loop : {toks} tokens over {steps} steps in {t_srv:.2f}s, "
+          f"swaps={batcher.swaps}")
+    for r in reqs:
+        pre = sum(1 for e in r.epochs if e == 0)
+        print(f"  rid={r.rid}: {pre} tokens from checkpoint step 0, "
+              f"{len(r.out) - pre} from step {batcher.weights.step}")
 
 
 if __name__ == "__main__":

@@ -216,6 +216,20 @@ def read_meta(path: str) -> tuple[int | None, dict]:
     return payload.get("step"), payload.get("extra") or {}
 
 
+def try_read_meta(path: str) -> tuple[int | None, dict] | None:
+    """`read_meta` for watch loops that race a writer: returns None instead
+    of raising when the checkpoint is absent or mid-replace.  Because every
+    file lands via `_write_atomic`, a readable meta file is always whole —
+    the only transient states a poller can observe are "not there yet" and
+    "previous version", both of which the next poll resolves."""
+    try:
+        return read_meta(path)
+    except FileNotFoundError:
+        return None
+    except Exception:
+        return None   # torn byte stream from a pre-atomic writer; retry
+
+
 def exists(path: str) -> bool:
     return os.path.exists(os.path.join(path, "state.msgpack"))
 

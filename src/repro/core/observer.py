@@ -39,6 +39,21 @@ import threading
 from typing import Any, Callable
 
 
+def fanout(*handlers: Callable[[int, Any], None]) -> Callable[[int, Any], None]:
+    """Compose observer handlers: one AsyncObserver feeding several
+    consumers — e.g. the checkpoint writer AND a serving
+    `WeightSubscriber`/`publish_weights` (launch/weights.py) — so the
+    snapshot is staged (device_get) exactly once and every consumer sees
+    the identical host tree.  Handlers run in order on the worker thread;
+    the first exception propagates (surfaced at drain/close like any
+    handler error), so a broken publisher cannot silently eat the
+    checkpoint write behind it — order the critical consumer first."""
+    def handler(step: int, snapshot: Any) -> None:
+        for h in handlers:
+            h(step, snapshot)
+    return handler
+
+
 class AsyncObserver:
     """Background worker for eval/checkpoint observers (double-buffered).
 

@@ -13,8 +13,16 @@ query-head grid coordinate by the group size, so no head replication ever
 materializes in HBM.
 
 `window`/`prefix_len` must be static here (Python ints): the TPU kernel
-specializes the mask.  The ring-buffer decode path (traced k_positions)
-stays on the jnp reference — see ops.flash_attention.
+specializes the mask.
+
+`flash_decode` is the single-query serving variant (q-block = 1): one query
+per sequence against the paged/ring KV cache, grid (batch, kv_heads,
+k_blocks), the whole GQA group's [g, d] query tile resident per program.
+Unlike the training kernel its mask inputs are RUNTIME values — the model
+scan feeds per-layer windows as scan xs, continuous batching feeds per-slot
+ragged positions, and the ring cache feeds absolute key positions — so they
+ride in as int32 operands read inside the kernel rather than specializing
+it.  Dispatch: ops.flash_attention routes every sq==1 causal call here.
 """
 from __future__ import annotations
 
@@ -127,3 +135,118 @@ def _call(kernel, q, k, v, b, hq, n_q, n_k, bq, bk, d, g, sq, pad_q,
         scratch_shapes=scratch,
         interpret=interpret,
     )(q, k, v)
+
+
+# --------------------------------------------------------------------------
+# Single-query decode kernel (serving hot path)
+# --------------------------------------------------------------------------
+
+def _decode_kernel(qoff_ref, win_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float, causal: bool,
+                   prefix_len: int, n_k: int):
+    """One (batch row, kv head) pair's GQA group against one K block.
+
+    The online-softmax accumulators are [g]-shaped (g = query heads per kv
+    head): the whole group shares the K/V tiles, so GQA costs one K/V read
+    per GROUP instead of per query head.  Mask semantics mirror ref._mask
+    exactly; `k_idx` comes from the kpos operand (arange for a dense cache,
+    absolute stream positions for a ring buffer, -1 marking padding/empty),
+    and the query's absolute position / window arrive as runtime scalars."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)          # [g, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bk, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = q @ k.T * scale                                 # [g, bk]
+
+    qpos = qoff_ref[0, 0]                               # absolute query pos
+    win = win_ref[0, 0]                                 # per-layer window
+    k_idx = jnp.broadcast_to(kpos_ref[0, :][None, :], s.shape)
+    valid = k_idx >= 0                                  # -1 = pad / empty
+    ok = valid
+    if causal:
+        ok &= k_idx <= qpos
+    ok &= (win <= 0) | (k_idx > qpos - win)
+    if prefix_len > 0:
+        ok |= valid & (k_idx < prefix_len)              # bidirectional prefix
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, 0, :, :] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "prefix_len", "scale", "block_k",
+                              "interpret"))
+def flash_decode(q, k, v, *, causal=True, window=0, prefix_len=0, q_offset=0,
+                 scale=None, k_positions=None, block_k=128, interpret=False):
+    """Single-query decode: q [B,1,Hq,D] against a KV cache k/v [B,Sk,Hkv,D].
+
+    Unlike `flash_attention`, `window` (scalar) and `q_offset` (scalar or
+    per-batch [B] — ragged continuous batching) may be TRACED; they ride in
+    as int32 operands.  `k_positions [Sk]` serves the ring-buffer cache:
+    absolute stream position per cache row, -1 for empty.  Returns
+    [B,1,Hq,D].
+    """
+    b, sq, hq, d = q.shape
+    assert sq == 1, "flash_decode is the single-query kernel"
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = float(scale) if scale is not None else d ** -0.5
+
+    qoff = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1),
+                            (b,)).reshape(b, 1)
+    win = jnp.reshape(jnp.asarray(window, jnp.int32), (1, 1))
+    kpos = (jnp.arange(sk, dtype=jnp.int32) if k_positions is None
+            else jnp.asarray(k_positions, jnp.int32))
+
+    bk = min(block_k, sk)
+    pad_k = (-sk) % bk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad_k), constant_values=-1)
+    n_k = (sk + pad_k) // bk
+    kpos = kpos.reshape(1, sk + pad_k)
+    qg = q.reshape(b, hkv, g, d)     # head h = kv*g + gi, same grouping as ref
+
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = functools.partial(_decode_kernel, scale=scale, causal=causal,
+                               prefix_len=prefix_len, n_k=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h, j: (b_, 0)),       # q_offset
+            pl.BlockSpec((1, 1), lambda b_, h, j: (0, 0)),        # window
+            pl.BlockSpec((1, bk), lambda b_, h, j: (0, j)),       # k positions
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h, j: (b_, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h, j: (b_, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g, d), jnp.float32),
+                        pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g,), jnp.float32)],
+        interpret=interpret,
+    )(qoff, win, kpos, qg, k, v)
+    return out.reshape(b, 1, hq, d)

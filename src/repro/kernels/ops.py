@@ -43,14 +43,26 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     """q [B,Sq,H,D], k/v [B,Sk,Hkv,D] (GQA by head broadcast)."""
     import numpy as _np
     ragged = getattr(q_offset, "ndim", 0) and _np.ndim(q_offset) > 0
-    if _BACKEND == "jnp" or k_positions is not None or ragged:
-        # ring-buffer decode (k_positions) stays on the jnp path: it is a
-        # [B,1,H,D]x[B,L,H,D] contraction with a data-dependent mask.
+    if _BACKEND != "jnp" and q.shape[1] == 1 and causal:
+        # the serving hot path: single-query decode runs the q-block=1
+        # Pallas kernel, which takes window / q_offset (incl. ragged [B]) /
+        # ring k_positions as runtime operands — the cases the training
+        # kernel's static masks cannot express.
+        from repro.kernels import flash_attention as _k
+        return _k.flash_decode(q, k, v, causal=causal, window=window,
+                               prefix_len=prefix_len, q_offset=q_offset,
+                               scale=scale, k_positions=k_positions,
+                               interpret=(_BACKEND == "interpret"))
+    traced_window = isinstance(window, jax.core.Tracer)
+    if _BACKEND == "jnp" or k_positions is not None or ragged or traced_window:
+        # full-sequence ring/ragged shapes — and traced windows from the
+        # scan-stacked prefill — stay on the jnp path: the block kernel's
+        # masks are static.
         return ref.attention(q, k, v, causal=causal, window=window,
                              prefix_len=prefix_len, q_offset=q_offset,
                              scale=scale, k_positions=k_positions)
     from repro.kernels import flash_attention as _k
-    return _k.flash_attention(q, k, v, causal=causal, window=window,
+    return _k.flash_attention(q, k, v, causal=causal, window=int(window),
                               prefix_len=prefix_len, q_offset=q_offset,
                               scale=scale, interpret=(_BACKEND == "interpret"))
 

@@ -8,6 +8,23 @@ capacity.  Single-sequence prefill writes into a batch slot via the same
 `decode_step` program at prompt positions (slot-local prefill), keeping the
 number of compiled programs at two.
 
+Weights live as `ServingWeights` flat dtype buckets (launch/weights.py): the
+decode program takes the bucket buffers and unflattens inside the jit (pure
+slices — bitwise the tree params), so a hot swap replaces one contiguous
+buffer per dtype and never recompiles.  `maybe_swap()` is the swap point,
+called between decode steps; the "refresh" policy replays every in-flight
+sequence's known tokens through the slot-local prefill under the new weights,
+which is what makes post-swap tokens bitwise-equal to a server restarted from
+the swapped checkpoint (tests/test_serving.py).  Each emitted token is
+stamped with the swap-epoch index active when it was sampled
+(`Request.epochs`), so the token stream is fully attributable to checkpoint
+steps.
+
+Sampling (temperature > 0) is per-request: token t of request r is drawn
+from fold_in(fold_in(key(seed), r.rid), t), a pure function of (seed, rid,
+emitted-count) — a request's samples never depend on which other requests
+happen to share the batch, and a post-swap replay rejoins the same stream.
+
 CPU-runnable at smoke scale (tests/test_batching.py); the same structure is
 what a production v5e server would run per model replica.
 """
@@ -15,13 +32,13 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
+from repro.launch.weights import ServingWeights, WeightSubscriber
 
 
 @dataclasses.dataclass
@@ -30,6 +47,7 @@ class Request:
     prompt: np.ndarray          # [P] int32
     max_new: int
     out: list = dataclasses.field(default_factory=list)
+    epochs: list = dataclasses.field(default_factory=list)  # swap epoch per token
     done: bool = False
 
 
@@ -37,27 +55,73 @@ class ContinuousBatcher:
     """Fixed `slots`-wide decode batch over a shared KV/SSM cache."""
 
     def __init__(self, cfg, params, *, slots: int, max_len: int,
-                 temperature: float = 0.0, seed: int = 0):
-        self.cfg, self.params = cfg, params
+                 temperature: float = 0.0, seed: int = 0,
+                 subscriber: WeightSubscriber | None = None):
+        self.cfg = cfg
         self.mod = api.get_module(cfg)
+        self.weights = (params if isinstance(params, ServingWeights)
+                        else ServingWeights(cfg, params))
+        self.subscriber = subscriber
         self.slots = slots
         self.max_len = max_len
         self.temperature = temperature
-        self.rng = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(seed)
         self.cache = self.mod.init_cache(cfg, slots, max_len,
                                          dtype=jnp.float32)
         self.pos = np.zeros(slots, np.int32)       # next write position
         self.active: list[Request | None] = [None] * slots
         self.queue: deque[Request] = deque()
+        self.tokens_emitted = 0
+        self.swaps = 0
+        spec = self.weights.spec
         self._decode = jax.jit(
-            lambda p, tok, c, pos: self.mod.decode_step(cfg, p, tok, c, pos))
+            lambda bufs, tok, c, pos: self.mod.decode_step(
+                cfg, spec.unflatten(bufs), tok, c, pos))
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) > self.max_len:
+            # reject, don't silently truncate: a prompt longer than the
+            # cache would wrap through JAX's clamping dynamic_update_slice
+            # and corrupt the tail of the lane
+            raise ValueError(
+                f"prompt of request {req.rid} is {len(req.prompt)} tokens "
+                f"but the cache holds max_len={self.max_len}")
         self.queue.append(req)
+
+    # -- hot weight swap ----------------------------------------------------
+
+    def maybe_swap(self) -> bool:
+        """The swap point, between decode steps.  Pulls the newest published
+        weights (if any) from the subscriber, swaps the flat buckets in
+        place, and REFRESHES every in-flight sequence: cursor and cache lane
+        reset so the known tokens replay through the slot-local prefill
+        under the new weights.  Post-swap tokens are then bitwise what a
+        server restarted from that checkpoint would emit — replay costs one
+        decode step per replayed token, the price of exact attribution."""
+        if self.subscriber is None:
+            return False
+        self.subscriber.poll()
+        got = self.subscriber.take()
+        if got is None:
+            return False
+        step, source, params = got
+        if step <= self.weights.step:
+            return False
+        self.weights.swap(params, step=step, source=source,
+                          tokens_before=self.tokens_emitted)
+        self.swaps += 1
+        live = [s for s, r in enumerate(self.active) if r is not None]
+        for s in live:
+            self.active[s]._cursor = 0
+            self.pos[s] = 0
+        if live:
+            self.cache = api.zero_cache_slots(self.cache, live)
+        return True
 
     # -- internals ----------------------------------------------------------
 
     def _admit(self) -> None:
+        admitted = []
         for s in range(self.slots):
             if self.active[s] is not None or not self.queue:
                 continue
@@ -67,17 +131,40 @@ class ContinuousBatcher:
             req._cursor = 0
             self.active[s] = req
             self.pos[s] = 0
+            admitted.append(s)
+        if admitted:
+            # a recycled lane must be cleared: transformer KV survives dirty
+            # lanes by accident (positional overwrite + causal mask), but
+            # mamba2/zamba2 recurrent SSM/conv state would leak the previous
+            # request into the new one
+            self.cache = api.zero_cache_slots(self.cache, admitted)
 
     def _slot_token(self, s: int) -> int:
+        """Sequence token at the slot's cursor: prompt, then emitted tokens
+        (the replay form a post-swap refresh depends on)."""
         req = self.active[s]
         if req is None:
             return 0
-        if req._cursor < len(req.prompt):
-            return int(req.prompt[req._cursor])
-        return int(req.out[-1]) if req.out else int(req.prompt[-1])
+        i = req._cursor
+        if i < len(req.prompt):
+            return int(req.prompt[i])
+        return int(req.out[i - len(req.prompt)])
+
+    def _next_tokens(self, logits: jax.Array) -> np.ndarray:
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, -1))
+        keys = jnp.stack([
+            jax.random.fold_in(jax.random.fold_in(self._base_key, r.rid),
+                               len(r.out))
+            if r is not None else self._base_key
+            for r in self.active])
+        samp = jax.vmap(lambda k, lg: jax.random.categorical(k, lg))(
+            keys, logits / self.temperature)
+        return np.asarray(samp)
 
     def step(self) -> int:
         """One decode step over all slots. Returns #active sequences."""
+        self.maybe_swap()
         self._admit()
         if not any(r is not None for r in self.active):
             return 0
@@ -86,25 +173,27 @@ class ContinuousBatcher:
         # per-slot (ragged) positions: each slot writes/attends at its own
         # cursor — exactness verified vs per-sequence decode in the tests
         pos = jnp.asarray(self.pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, toks, self.cache, pos)
-        if self.temperature > 0:
-            self.rng, sub = jax.random.split(self.rng)
-            nxt = jax.random.categorical(sub, logits / self.temperature, -1)
-        else:
-            nxt = jnp.argmax(logits, -1)
-        nxt = np.asarray(nxt)
+        logits, self.cache = self._decode(self.weights.bufs, toks, self.cache,
+                                          pos)
+        nxt = self._next_tokens(logits)
         n_active = 0
         for s, req in enumerate(self.active):
             if req is None:
                 continue
             n_active += 1
             self.pos[s] += 1
-            if req._cursor < len(req.prompt) - 1:
-                req._cursor += 1            # still prefilling this slot
+            known = len(req.prompt) + len(req.out)
+            if req._cursor < known - 1:
+                req._cursor += 1    # prefilling (or post-swap replaying)
                 continue
             req._cursor += 1
             req.out.append(int(nxt[s]))
-            if len(req.out) >= req.max_new or self.pos[s] >= self.max_len - 1:
+            req.epochs.append(self.weights.epoch)
+            self.tokens_emitted += 1
+            # the last legal cache write is position max_len-1, whose decode
+            # just produced one more sampled token — retire at pos==max_len,
+            # not max_len-1, or the last cache slot is wasted
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_len:
                 req.done = True
                 self.active[s] = None       # retire; slot is reusable
         return n_active

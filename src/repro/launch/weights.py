@@ -1,0 +1,207 @@
+"""Hot weight swap for the serving path: flat-bucket publish/subscribe.
+
+The train-to-serve contract: a long QSR run continuously publishes its
+consensus params (`engine.params_single(synced state)`) and a live endpoint
+swaps them in **between decode steps** without restarting.  The pieces:
+
+  * `publish_weights` — the producer side.  An `AsyncObserver` handler (or
+    any host thread) writes a params-only checkpoint via `checkpoint.io.save`
+    — atomic, durable, step-stamped — tagged ``serving_weights/v1``.
+  * `WeightSubscriber` — the consumer side.  Latest-wins slot fed from two
+    sources: `publish()` (in-process, called straight from the observer
+    worker thread) and `poll()` (a `watch_dir` holding published
+    checkpoints — the cross-process form).  Mirrors the AsyncObserver's
+    double-buffer discipline: a superseded snapshot is dropped, the server
+    only ever sees the newest weights.
+  * `ServingWeights` — the in-place swap target.  Params live as
+    `FlatParamSpace` dtype buckets, so `swap()` is ONE contiguous host→device
+    copy per dtype bucket (the FlatParamSpace refactor's serving payoff);
+    the decode program takes the bucket buffers and unflattens inside the
+    jit, so a swap never recompiles.  Every swap appends a `SwapEpoch` audit
+    record (the serving mirror of the engine's `BatchEpoch` /
+    `MembershipEpoch`), which is what makes every emitted token attributable
+    to a checkpoint step (`ContinuousBatcher` stamps each token with the
+    epoch index active when it was sampled).
+
+Swap policy for in-flight sequences is "refresh": the batcher replays each
+live sequence's tokens through its slot-local prefill under the new weights
+(launch/batching.py `maybe_swap`), so post-swap tokens are bitwise what a
+server restarted from that checkpoint would emit — the proof tested in
+tests/test_serving.py.  The cheap alternative (keep the stale cache, mixed
+attribution) is documented in README §Serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.core import flat
+
+WEIGHTS_KIND = "serving_weights/v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapEpoch:
+    """One weight generation of a serving process (audit record).
+
+    Mirror of the engine's BatchEpoch/MembershipEpoch: a frozen,
+    JSON-able row appended at every swap, so the serving log is a total
+    order of weight generations and `tokens_before` splits the token
+    stream exactly at the swap point."""
+    index: int            # 0 = the weights the server started with
+    step: int             # producer checkpoint step of these weights
+    source: str           # "init" | "publish" | "watch:<dir>" | ...
+    tokens_before: int    # tokens emitted by this server before the swap
+    wall_time: float
+
+
+class ServingWeights:
+    """Serving params as FlatParamSpace dtype buckets + swap-epoch audit.
+
+    `bufs` is what the decode program consumes (unflatten fuses into
+    slices inside the jit); `swap()` replaces the buckets in place — one
+    contiguous device_put per dtype bucket — and bumps the epoch."""
+
+    def __init__(self, cfg, params: Any, *, step: int = 0,
+                 source: str = "init"):
+        self.cfg = cfg
+        self.spec = flat.FlatParamSpace(params)
+        self.bufs = {b: jax.device_put(v)
+                     for b, v in self.spec.flatten(params).items()}
+        self.step = step
+        self.epochs: list[SwapEpoch] = [
+            SwapEpoch(0, step, source, 0, time.time())]
+
+    @property
+    def epoch(self) -> int:
+        return self.epochs[-1].index
+
+    def as_tree(self) -> Any:
+        """Current weights as the model pytree (pure slices of the bufs)."""
+        return self.spec.unflatten(self.bufs)
+
+    def swap(self, params: Any, *, step: int, source: str = "publish",
+             tokens_before: int = 0) -> SwapEpoch:
+        """Replace the serving weights in place: one contiguous copy per
+        dtype bucket.  `params` must match the spec's tree (same shapes and
+        dtypes — a different architecture is a deploy, not a swap)."""
+        bufs = self.spec.flatten(params)
+        for b in self.spec.buckets:
+            self.bufs[b] = jax.device_put(bufs[b])
+        self.step = step
+        ep = SwapEpoch(self.epoch + 1, step, source, tokens_before,
+                       time.time())
+        self.epochs.append(ep)
+        return ep
+
+    def audit(self) -> list[dict]:
+        """The swap-epoch trail as JSON-able rows (CI uploads this)."""
+        return [dataclasses.asdict(e) for e in self.epochs]
+
+
+def params_like(cfg, dtype=None) -> Any:
+    """Host zeros tree matching the model params — the `like` a
+    WeightSubscriber needs to restore published checkpoints (real zero
+    arrays, not ShapeDtypeStructs: `restore_with_meta` validates shape and
+    casts dtype only against array-like targets)."""
+    import jax.numpy as jnp
+    from repro.models import api, param as pm
+    mod = api.get_module(cfg)
+    ab = pm.abstract_params(mod.param_defs(cfg),
+                            jnp.float32 if dtype is None else dtype)
+    return jax.tree.map(lambda s: np.zeros(s.shape, np.dtype(s.dtype)), ab)
+
+
+def publish_weights(path: str, params: Any, *, step: int,
+                    extra: dict | None = None) -> None:
+    """Write a params-only serving checkpoint (atomic + durable via
+    checkpoint.io).  The natural AsyncObserver handler body:
+
+        AsyncObserver(lambda step, snap:
+            publish_weights(d, snap["params"], step=step))
+    """
+    meta = {"kind": WEIGHTS_KIND, "published_at": time.time()}
+    meta.update(extra or {})
+    ckpt_io.save(path, params, step=step, extra=meta)
+
+
+def load_weights(path: str, like: Any) -> tuple[Any, int, dict]:
+    """Restore a published serving checkpoint. Returns (params, step, extra)."""
+    tree, step, extra = ckpt_io.restore_with_meta(path, like)
+    return tree, int(step or 0), extra
+
+
+class WeightSubscriber:
+    """Latest-wins weight feed for a serving process.
+
+    Thread contract: `publish()` may be called from any thread (typically
+    the AsyncObserver worker); `poll()`/`take()` belong to the serving
+    thread.  The slot holds host-staged params so the producer's device
+    buffers are never retained."""
+
+    def __init__(self, *, watch_dir: str | None = None,
+                 like: Any | None = None):
+        self.watch_dir = watch_dir
+        self._like = like
+        self._lock = threading.Lock()
+        self._latest: tuple[int, str, Any] | None = None
+        self._seen_step: int | None = None
+        self.superseded = 0           # snapshots dropped by latest-wins
+
+    # -- producer side -----------------------------------------------------
+
+    def publish(self, step: int, params: Any, *,
+                source: str = "publish") -> None:
+        """Offer new weights (in-process path). Stages to host numpy so the
+        caller's buffers are released; latest-wins on `step`."""
+        host = jax.tree.map(np.asarray, params)
+        self._offer(int(step), source, host)
+
+    # -- serving side ------------------------------------------------------
+
+    def poll(self) -> None:
+        """Check the watch_dir for a newer published checkpoint and load it
+        into the slot.  Tolerates a racing writer: a missing or torn file
+        is simply retried on the next poll (checkpoint.io writes are atomic,
+        so a finished file is always wholly readable)."""
+        if self.watch_dir is None:
+            return
+        meta = ckpt_io.try_read_meta(self.watch_dir)
+        if meta is None:
+            return
+        step = meta[0]
+        if step is None or (self._seen_step is not None
+                            and int(step) <= self._seen_step):
+            return
+        if self._like is None:
+            raise ValueError("WeightSubscriber with a watch_dir needs a "
+                             "`like` tree to restore into (see params_like)")
+        try:
+            tree, got_step, _ = ckpt_io.restore_with_meta(self.watch_dir,
+                                                          self._like)
+        except (ckpt_io.CheckpointError, FileNotFoundError):
+            return                     # mid-replace; next poll sees it whole
+        got_step = int(got_step if got_step is not None else step)
+        self._seen_step = got_step
+        self._offer(got_step, f"watch:{self.watch_dir}", tree)
+
+    def take(self) -> tuple[int, str, Any] | None:
+        """Pop the newest offered weights, or None. The swap point calls
+        this between decode steps (ContinuousBatcher.maybe_swap)."""
+        with self._lock:
+            got, self._latest = self._latest, None
+        return got
+
+    def _offer(self, step: int, source: str, tree: Any) -> None:
+        with self._lock:
+            if self._latest is not None:
+                if step <= self._latest[0]:
+                    return             # older than what's already queued
+                self.superseded += 1
+            self._latest = (step, source, tree)

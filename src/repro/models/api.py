@@ -8,6 +8,9 @@ Every module exposes:
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
+
 from repro.configs.base import ModelConfig
 from repro.models import mamba2, transformer, vit, whisper, zamba2
 
@@ -25,6 +28,20 @@ _FAMILY = {
 
 def get_module(cfg: ModelConfig):
     return _FAMILY[cfg.family]
+
+
+def zero_cache_slots(cache, slots):
+    """Zero the given batch lanes of a decode cache, whatever the family.
+
+    Every cache leaf across families carries the batch axis at position 1 —
+    transformer KV [L,B,S,Hkv,hd], mamba2 conv/ssm [L,B,...], zamba2
+    attn/mamba state [G-or-L,B,...] — so one tree.map clears KV rows and
+    recurrent SSM/conv state alike.  This is the slot-recycle invariant the
+    ContinuousBatcher relies on: transformer KV happens to survive a dirty
+    lane (positional overwrite + causal mask), but recurrent state does
+    not, and a hot weight swap's replay needs clean lanes for any family."""
+    idx = jnp.asarray(slots, jnp.int32)
+    return jax.tree.map(lambda c: c.at[:, idx].set(0), cache)
 
 
 def batch_keys(cfg: ModelConfig) -> tuple[str, ...]:

@@ -176,9 +176,14 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict, *,
 
 def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, cache: dict,
                 pos, *, prefix_len: int = 0, ring: bool = False):
-    """One decode step. token [B] int32; pos scalar int32 (same for batch).
-    ring=True: the cache is a circular buffer shorter than the stream
-    (sub-quadratic long-context serving). Returns (logits [B,V], new cache)."""
+    """One decode step. token [B] int32; pos scalar int32 (aligned batch) or
+    [B] int32 (ragged continuous batching — each slot writes/attends at its
+    own position).  ring=True: the cache is a circular buffer shorter than
+    the stream (sub-quadratic long-context serving).  On the Pallas
+    backends every per-layer attention here lowers to the single-query
+    `flash_decode` kernel (kernels/flash_attention.py), which takes the
+    traced per-layer window, ragged offsets, and ring key positions as
+    runtime operands.  Returns (logits [B,V], new cache)."""
     h = cm.embed_apply(cfg, params["embed"], token[:, None])
     pos = jnp.asarray(pos)
     # pos may be scalar (aligned batch) or [B] (ragged continuous batching)

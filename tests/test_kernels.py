@@ -11,7 +11,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.adamw_update import adamw_update
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import flash_attention, flash_decode
 from repro.kernels.rmsnorm import rms_norm
 from repro.kernels.swiglu import swiglu
 
@@ -133,6 +133,124 @@ def test_ring_buffer_mask_equals_dense_window():
                          causal=True, q_offset=ln - 1)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
                                atol=1e-5)
+
+
+# ------------------------------------------------- single-query decode ----
+
+DECODE_CASES = [
+    # (sk, hq, hkv, d, window, prefix)
+    (64, 4, 4, 64, 0, 0),          # dense causal
+    (257, 8, 2, 64, 0, 0),         # GQA 4:1, ragged kv length
+    (128, 8, 1, 128, 0, 0),        # MQA
+    (200, 4, 4, 64, 48, 0),        # sliding window
+    (160, 4, 2, 64, 64, 16),       # window + prefix-LM (VLM serving)
+    (96, 4, 4, 32, 0, 24),         # prefix only
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_flash_decode_matches_oracle(case, dtype):
+    """The serving kernel vs the jnp reference, with window and q_offset
+    passed TRACED (the model scan feeds per-layer windows as scan xs)."""
+    sk, hq, hkv, d, window, prefix = case
+    ks = jax.random.split(jax.random.PRNGKey(sum(case)), 3)
+    q = jax.random.normal(ks[0], (2, 1, hq, d), dtype)
+    k = jax.random.normal(ks[1], (2, sk, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (2, sk, hkv, d), dtype)
+    qoff = jnp.asarray(sk - 1, jnp.int32)          # decoding the last position
+    win = jnp.asarray(window, jnp.int32)           # traced, not specialized
+    got = flash_decode(q, k, v, causal=True, window=win, prefix_len=prefix,
+                       q_offset=qoff, interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=win, prefix_len=prefix,
+                         q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5 * TOL[dtype], atol=5 * TOL[dtype])
+
+
+def test_flash_decode_ragged_offsets():
+    """Per-slot [B] q_offsets (continuous batching): each row attends only
+    up to its own position, whatever garbage sits beyond it in the cache."""
+    b, sk, hq, hkv, d = 4, 96, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, 1, hq, d))
+    k = jax.random.normal(ks[1], (b, sk, hkv, d))
+    v = jax.random.normal(ks[2], (b, sk, hkv, d))
+    qoff = jnp.asarray([3, 95, 40, 0], jnp.int32)
+    got = flash_decode(q, k, v, causal=True, q_offset=qoff, interpret=True,
+                       block_k=32)
+    want = ref.attention(q, k, v, causal=True, q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_ring_positions():
+    """The ring-buffer cache: k_positions carry absolute stream positions
+    (-1 = empty); the kernel must equal the dense-window reference."""
+    d, h = 32, 2
+    ln, pos = 8, 13
+    ks = jax.random.normal(jax.random.PRNGKey(0), (1, pos + 1, h, d))
+    vs = jax.random.normal(jax.random.PRNGKey(1), (1, pos + 1, h, d))
+    ring_k = jnp.zeros((1, ln, h, d))
+    ring_v = jnp.zeros((1, ln, h, d))
+    for p in range(pos + 1):
+        ring_k = ring_k.at[:, p % ln].set(ks[:, p])
+        ring_v = ring_v.at[:, p % ln].set(vs[:, p])
+    write = pos % ln
+    base = pos - write
+    idx = jnp.arange(ln)
+    k_positions = jnp.where(idx <= write, base + idx, base - ln + idx)
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, h, d))
+    got = flash_decode(q, ring_k, ring_v, causal=True, q_offset=pos,
+                       k_positions=k_positions, interpret=True, block_k=4)
+    want = ref.attention(q, ks[:, pos + 1 - ln:], vs[:, pos + 1 - ln:],
+                         causal=True, q_offset=ln - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(sk=st.integers(1, 160), hkv=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2, 4]), window=st.integers(0, 64),
+       qpos_frac=st.floats(0.0, 1.0))
+@settings(max_examples=15, deadline=None)
+def test_flash_decode_property_sweep(sk, hkv, g, window, qpos_frac):
+    d = 32
+    hq = hkv * g
+    qpos = min(sk - 1, int(qpos_frac * sk))
+    ks = jax.random.split(jax.random.PRNGKey(sk * 131 + window), 3)
+    q = jax.random.normal(ks[0], (1, 1, hq, d))
+    k = jax.random.normal(ks[1], (1, sk, hkv, d))
+    v = jax.random.normal(ks[2], (1, sk, hkv, d))
+    got = flash_decode(q, k, v, causal=True, window=jnp.asarray(window),
+                       q_offset=qpos, interpret=True, block_k=32)
+    want = ref.attention(q, k, v, causal=True, window=window, q_offset=qpos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ops_dispatch_routes_decode_to_pallas(monkeypatch):
+    """On the interpret/pallas backends every sq==1 causal call — including
+    the ragged and ring shapes that previously fell back to jnp — must hit
+    flash_decode and still match the oracle."""
+    from repro.kernels import ops as kops
+    monkeypatch.setattr(kops, "_BACKEND", "interpret")
+    calls = []
+    from repro.kernels import flash_attention as fa
+    orig = fa.flash_decode
+    monkeypatch.setattr(fa, "flash_decode",
+                        lambda *a, **kw: calls.append(1) or orig(*a, **kw))
+    b, sk, h, d = 2, 40, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    k = jax.random.normal(ks[1], (b, sk, h, d))
+    v = jax.random.normal(ks[2], (b, sk, h, d))
+    qoff = jnp.asarray([5, 17], jnp.int32)
+    got = kops.flash_attention(q, k, v, causal=True, q_offset=qoff)
+    want = ref.attention(q, k, v, causal=True, q_offset=qoff)
+    assert calls, "ragged decode did not route to flash_decode"
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ----------------------------------------------------------------- swiglu --

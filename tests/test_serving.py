@@ -1,0 +1,326 @@
+"""Live-endpoint serving: hot weight swap + the serve-path regressions.
+
+The tentpole proof: a server whose weights are swapped mid-sequence emits
+post-swap tokens BITWISE-equal to a server restarted from that checkpoint
+(the "refresh" replay policy, launch/batching.py `maybe_swap`), with every
+emitted token stamped with its swap epoch.  Plus the end-to-end form — a
+RoundEngine training run publishing checkpoints through an AsyncObserver
+while the server decodes — and the three serve-path bugfix regressions
+(stale slot recycle, VLM cache overflow, off-by-one retire).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs import registry as R
+from repro.configs.base import RunConfig
+from repro.core import engine as E
+from repro.core import observer as OBS
+from repro.core import schedules
+from repro.launch import weights as W
+from repro.launch.batching import ContinuousBatcher, Request
+from repro.launch.serve import generate, run_service
+from repro.models import api, param as pm
+from repro.optim.lr import make_lr_fn
+
+
+def _params(cfg, seed=0):
+    mod = api.get_module(cfg)
+    return pm.init_params(mod.param_defs(cfg), jax.random.PRNGKey(seed),
+                          jnp.float32)
+
+
+def _prompt(cfg, seed, n):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,), 0,
+                                         cfg.vocab), np.int32)
+
+
+# ------------------------------------------------------- ServingWeights --
+
+def test_serving_weights_flat_roundtrip_and_audit():
+    """Flat-bucket round-trip is bitwise, swap() replaces the buckets and
+    appends the audit row."""
+    cfg = R.get_smoke_config("gemma3-4b")
+    p0, p1 = _params(cfg, 0), _params(cfg, 7)
+    sw = W.ServingWeights(cfg, p0, step=3, source="init")
+    for a, b in zip(jax.tree.leaves(sw.as_tree()), jax.tree.leaves(p0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ep = sw.swap(p1, step=11, source="publish", tokens_before=5)
+    assert (sw.epoch, sw.step) == (1, 11)
+    assert (ep.index, ep.step, ep.tokens_before) == (1, 11, 5)
+    for a, b in zip(jax.tree.leaves(sw.as_tree()), jax.tree.leaves(p1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    rows = sw.audit()
+    assert [r["index"] for r in rows] == [0, 1]
+    assert [r["step"] for r in rows] == [3, 11]
+
+
+def test_weight_subscriber_latest_wins():
+    cfg = R.get_smoke_config("gemma3-4b")
+    sub = W.WeightSubscriber()
+    sub.publish(1, _params(cfg, 1))
+    sub.publish(3, _params(cfg, 3))
+    sub.publish(2, _params(cfg, 2))     # older than queued: dropped
+    step, source, _ = sub.take()
+    assert (step, source) == (3, "publish")
+    assert sub.superseded == 1
+    assert sub.take() is None
+
+
+# ----------------------------------------------- hot swap: bitwise proof --
+
+def test_hot_swap_matches_restart_from_checkpoint():
+    """The tentpole: publish new weights mid-sequence; post-swap tokens must
+    be bitwise what a fresh server restarted from those weights emits given
+    the same known token stream, and the epoch stamps must split the stream
+    exactly at the swap."""
+    cfg = R.get_smoke_config("gemma3-4b")
+    w0, w1 = _params(cfg, 0), _params(cfg, 7)
+    prompt = _prompt(cfg, 1, 5)
+
+    sub = W.WeightSubscriber()
+    batcher = ContinuousBatcher(cfg, w0, slots=2, max_len=48, subscriber=sub)
+    req = Request(rid=0, prompt=prompt, max_new=8)
+    batcher.submit(req)
+    # 5-token prompt: 4 slot-local prefill steps, then one token per step
+    while len(req.out) < 3:
+        batcher.step()
+    sub.publish(1, w1)
+    batcher.run()
+
+    assert req.done and len(req.out) == 8
+    assert batcher.swaps == 1
+    assert req.epochs == [0] * 3 + [1] * 5
+    swap_row = batcher.weights.epochs[-1]
+    assert (swap_row.index, swap_row.step, swap_row.tokens_before) == (1, 1, 3)
+
+    # restart reference: a fresh server on w1, fed prompt + the 3 tokens
+    # the old weights emitted, must continue with the same 5 tokens
+    ref = ContinuousBatcher(cfg, w1, slots=2, max_len=48)
+    prompt2 = np.concatenate([prompt, np.asarray(req.out[:3], np.int32)])
+    rref = Request(rid=0, prompt=prompt2, max_new=5)
+    ref.submit(rref)
+    ref.run()
+    assert rref.out == req.out[3:]
+
+
+def test_hot_swap_e2e_training_publishes_while_serving():
+    """End-to-end: a QSR training run publishes its consensus params through
+    an AsyncObserver (via `fanout`) into a watch dir; the serving loop polls
+    it up mid-sequence, swaps, and the post-swap tail is bitwise equal to a
+    server restarted from the restored checkpoint."""
+    import tempfile
+    cfg = R.get_smoke_config("starcoder2-3b")
+    run = RunConfig(schedule="qsr", optimizer="adamw", total_steps=8,
+                    peak_lr=3e-3, end_lr=1e-6, warmup_steps=2, h_base=2,
+                    alpha=0.001, remat=False, weight_decay=0.01)
+    lr_fn = make_lr_fn(run)
+    watch = tempfile.mkdtemp(prefix="repro-test-watch-")
+
+    p0 = _params(cfg, 0)
+    prompt = _prompt(cfg, 2, 6)
+    sub = W.WeightSubscriber(watch_dir=watch, like=W.params_like(cfg))
+    batcher = ContinuousBatcher(cfg, p0, slots=1, max_len=64, subscriber=sub)
+    req = Request(rid=0, prompt=prompt, max_new=7)
+    batcher.submit(req)
+    while len(req.out) < 2:        # emit 2 tokens under the initial weights
+        batcher.step()
+
+    published = []
+    obs = OBS.AsyncObserver(OBS.fanout(
+        lambda step, snap: W.publish_weights(watch, snap, step=step),
+        lambda step, snap: published.append(step)))
+    eng = E.RoundEngine(cfg, run, workers=2, b_loc=2, seq=16)
+    state = eng.init_state(p0)
+    for t, h in schedules.rounds(run, lr_fn):
+        state, _ = eng.run_round(state, t, h, lr_fn)
+        obs.submit(t + h, eng.params_single(eng.synced_view(state)))
+    obs.close()
+    # latest-wins may drop intermediate submits but never the final one
+    assert published[-1] == run.total_steps
+    assert published == sorted(published)
+
+    batcher.run()                  # first step polls, swaps, replays
+    assert req.done and len(req.out) == 7
+    assert batcher.swaps == 1
+    assert batcher.weights.step == run.total_steps
+    assert req.epochs == [0] * 2 + [1] * 5
+    assert batcher.weights.epochs[-1].source == f"watch:{watch}"
+
+    # restart-from-the-checkpoint reference, restored from disk
+    tree, got_step, extra = W.load_weights(watch, W.params_like(cfg))
+    assert got_step == run.total_steps
+    assert extra["kind"] == W.WEIGHTS_KIND
+    ref = ContinuousBatcher(cfg, tree, slots=1, max_len=64)
+    prompt2 = np.concatenate([prompt, np.asarray(req.out[:2], np.int32)])
+    rref = Request(rid=0, prompt=prompt2, max_new=5)
+    ref.submit(rref)
+    ref.run()
+    assert rref.out == req.out[2:]
+
+
+def test_run_service_audit_and_swap_hook():
+    """run_service drives mixed-length requests to completion and the audit
+    carries per-token epoch attribution across a mid-run swap."""
+    cfg = R.get_smoke_config("gemma3-4b")
+    w0, w1 = _params(cfg, 0), _params(cfg, 7)
+    sub = W.WeightSubscriber()
+    prompts = [_prompt(cfg, i, n) for i, n in enumerate((4, 6, 5))]
+    hooks = [(6, lambda b: sub.publish(1, w1))]
+    reqs, audit = run_service(cfg, W.ServingWeights(cfg, w0), prompts,
+                              slots=2, max_new=4, subscriber=sub, hooks=hooks)
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+    assert audit["swaps"] == 1
+    assert audit["tokens_emitted"] == 12
+    assert [row["index"] for row in audit["swap_epochs"]] == [0, 1]
+    flat = [e for r in audit["requests"] for e in r["epochs"]]
+    assert set(flat) == {0, 1}      # tokens attributed on both sides
+
+
+# -------------------------------------------- regression: slot recycle ---
+
+def test_slot_recycle_clears_stateful_cache():
+    """A recycled slot's cache lane must be zeroed on admit: mamba2's SSM /
+    conv state otherwise leaks the previous request into the new one (the
+    KV families mask it positionally, recurrent families do not)."""
+    cfg = R.get_smoke_config("mamba2-130m")
+    params = _params(cfg, 0)
+    pa, pb = _prompt(cfg, 1, 6), _prompt(cfg, 2, 5)
+
+    batcher = ContinuousBatcher(cfg, params, slots=1, max_len=32)
+    r1 = Request(rid=0, prompt=pa, max_new=4)
+    r2 = Request(rid=1, prompt=pb, max_new=4)
+    batcher.submit(r1)
+    batcher.submit(r2)
+    batcher.run()
+    assert r1.done and r2.done
+
+    fresh = ContinuousBatcher(cfg, params, slots=1, max_len=32)
+    ref = Request(rid=1, prompt=pb, max_new=4)
+    fresh.submit(ref)
+    fresh.run()
+    assert r2.out == ref.out, "recycled slot leaked SSM state"
+
+
+# ------------------------------------------ regression: VLM cache bound --
+
+def test_vlm_default_max_len_counts_image_prefix():
+    """`generate`'s default cache length must include the bidirectional
+    image prefix: a gen_len crossing the old (plen+gen_len) bound silently
+    corrupted the cache tail via clamped dynamic_update_slice."""
+    cfg = R.get_smoke_config("paligemma-3b")
+    params = _params(cfg, 0)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    extra = {"prefix_embeds": 0.02 * jax.random.normal(
+        jax.random.PRNGKey(2), (2, cfg.n_img_tokens, cfg.d_model))}
+    gen = cfg.n_img_tokens + 10     # crosses the un-fixed default bound
+    want = generate(cfg, params, prompts, gen_len=gen, max_len=96,
+                    extra=extra)
+    got = generate(cfg, params, prompts, gen_len=gen, extra=extra)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_generate_raises_on_cache_overflow():
+    cfg = R.get_smoke_config("paligemma-3b")
+    params = _params(cfg, 0)
+    prompts = jnp.asarray([_prompt(cfg, 1, 4)])
+    extra = {"prefix_embeds": 0.02 * jax.random.normal(
+        jax.random.PRNGKey(2), (1, cfg.n_img_tokens, cfg.d_model))}
+    short = 4 + cfg.n_img_tokens + 5 - 1      # one position too small
+    with pytest.raises(ValueError, match="exceed the KV cache"):
+        generate(cfg, params, prompts, gen_len=5, max_len=short, extra=extra)
+
+
+# -------------------------------------------- regression: retire bound ---
+
+def test_retire_uses_last_cache_position():
+    """A slot's last legal cache write is position max_len-1, whose decode
+    yields one more token: a 6-token prompt in a 16-slot lane must emit
+    16-6+1 = 11 tokens, not 10 (the old off-by-one)."""
+    cfg = R.get_smoke_config("gemma3-4b")
+    params = _params(cfg, 0)
+    prompt = _prompt(cfg, 1, 6)
+    batcher = ContinuousBatcher(cfg, params, slots=1, max_len=16)
+    req = Request(rid=0, prompt=prompt, max_new=100)
+    batcher.submit(req)
+    batcher.run()
+    assert req.done
+    assert len(req.out) == 11
+    # and they are the true greedy continuation, not junk from a wrapped lane
+    want = generate(cfg, params, jnp.asarray(prompt)[None], gen_len=11,
+                    max_len=17)
+    assert req.out == np.asarray(want[0, 6:]).tolist()
+
+
+def test_submit_rejects_overlong_prompt():
+    cfg = R.get_smoke_config("gemma3-4b")
+    batcher = ContinuousBatcher(cfg, _params(cfg, 0), slots=1, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        batcher.submit(Request(rid=0, prompt=_prompt(cfg, 1, 9), max_new=2))
+
+
+# --------------------------------------------------- sampling paths ------
+
+def test_generate_temperature_deterministic_under_seed():
+    cfg = R.get_smoke_config("gemma3-4b")
+    params = _params(cfg, 0)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0, cfg.vocab)
+    a = generate(cfg, params, prompts, gen_len=8, temperature=1.0, seed=3)
+    b = generate(cfg, params, prompts, gen_len=8, temperature=1.0, seed=3)
+    c = generate(cfg, params, prompts, gen_len=8, temperature=1.0, seed=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_batcher_sampling_is_per_request_deterministic():
+    """Token t of request r is a pure function of (seed, rid, t): the same
+    requests sampled under different slot counts — different co-scheduling,
+    different batch indices — must produce identical streams."""
+    cfg = R.get_smoke_config("gemma3-4b")
+    params = _params(cfg, 0)
+    prompts = [_prompt(cfg, i, n) for i, n in enumerate((5, 7, 6))]
+
+    def serve(slots):
+        b = ContinuousBatcher(cfg, params, slots=slots, max_len=32,
+                              temperature=1.0, seed=11)
+        rs = [Request(rid=i, prompt=p, max_new=5)
+              for i, p in enumerate(prompts)]
+        for r in rs:
+            b.submit(r)
+        b.run()
+        return [r.out for r in rs]
+
+    solo = serve(1)
+    packed = serve(3)
+    assert solo == packed
+    assert any(len(set(o)) > 1 for o in solo)   # actually sampling
+
+
+def test_batcher_sampling_survives_hot_swap_replay():
+    """Post-swap replay rejoins the same per-request sample stream: the
+    restart reference must match even at temperature > 0 (fold_in keys are
+    indexed by emitted count, not decode step)."""
+    cfg = R.get_smoke_config("gemma3-4b")
+    w0, w1 = _params(cfg, 0), _params(cfg, 7)
+    prompt = _prompt(cfg, 1, 5)
+    sub = W.WeightSubscriber()
+    batcher = ContinuousBatcher(cfg, w0, slots=1, max_len=48,
+                                temperature=1.0, seed=5, subscriber=sub)
+    req = Request(rid=0, prompt=prompt, max_new=7)
+    batcher.submit(req)
+    while len(req.out) < 3:
+        batcher.step()
+    sub.publish(1, w1)
+    batcher.run()
+    assert req.done and batcher.swaps == 1
+
+    # restart reference restores the request's in-flight state (same rid,
+    # pre-swap tokens as `out`), so its sample keys continue at count 3
+    ref = ContinuousBatcher(cfg, w1, slots=1, max_len=48,
+                            temperature=1.0, seed=5)
+    rref = Request(rid=0, prompt=prompt, max_new=7, out=list(req.out[:3]))
+    ref.submit(rref)
+    ref.run()
+    assert rref.out[3:] == req.out[3:]
