@@ -1,0 +1,17 @@
+"""Static-analysis layer: lower-time HLO auditing and source linting.
+
+Two layers, both pure analysis — nothing here executes a collective:
+
+* ``repro.analysis.rules`` + ``repro.analysis.audit`` — a declarative
+  rule registry evaluated against the AOT-lowered HLO of every
+  supported (layout x sync x wire x depth x mesh) configuration, with a
+  committed fingerprint baseline (``audit_baseline.json``) that CI
+  diffs against.
+* ``repro.analysis.source_lint`` — an AST pass over ``src/repro/``
+  that flags the ``python -O`` bare-assert hazard class, generic
+  ``raise Exception``, and unregistered audit-record schema strings.
+
+Driven by ``python -m repro.launch.audit``.
+"""
+
+from repro.analysis.schemas import SCHEMAS, is_registered  # noqa: F401

@@ -1,0 +1,397 @@
+"""Static program auditor: lower every supported config, evaluate rules.
+
+The audit matrix covers three kinds of point:
+
+* ``sync`` — every sync sub-program (blocking / partial / begin / apply)
+  per (layout x wire x mesh/policy), AOT-lowered via
+  ``launch/shapes.build_calib_case`` and profiled with
+  ``launch/hlo_analysis.payload_profile``;
+* ``round`` — full RoundEngine round programs (blocking and overlap at
+  depth 0/1/2), lowered with donated state so the donation-aliasing,
+  no-host-callback and no-degenerate-replica-group rules run against
+  exactly the programs production caches;
+* ``cache`` — the compile-cache key space of a full schedule, enumerated
+  statically by ``core/engine.enumerate_program_keys`` (zero compiles).
+
+Each point produces a fingerprint (rule verdicts + collective counts /
+bytes + donation pairs + program count) and the set is diffed against the
+committed ``analysis/audit_baseline.json``; any regression fails with a
+readable per-rule diff.  Driven by ``python -m repro.launch.audit``
+(which pins the 8-device sim before jax initializes — import this module
+only from a process that already did).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analysis import rules as R
+from repro.analysis import source_lint
+
+SCHEMA = "audit_fingerprint/v1"
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "audit_baseline.json")
+
+ARCH = "starcoder2-3b"
+
+# (label, policy, mesh dims) — dp: 4 workers x 2-way model sharding;
+# fsdp: 2 pods as workers, buckets chunked over (data, model).
+MESHES = (("dp4x2", "dp", (4, 2)), ("fsdp2x2x2", "fsdp", (2, 2, 2)))
+
+
+def _mesh_of(dims):
+    from repro.launch.mesh import make_debug_mesh
+
+    dims = tuple(dims)
+    if len(dims) == 2:
+        return make_debug_mesh(dims[0], dims[1])
+    return make_debug_mesh(dims[1], dims[2], pods=dims[0])
+
+
+def matrix() -> dict[str, dict]:
+    """key -> config for every audited point (JSON-serializable)."""
+    out: dict[str, dict] = {}
+
+    def add(key, **cfg):
+        out[key] = dict(cfg, key=key)
+
+    for mlabel, policy, dims in MESHES:
+        base = dict(kind="sync", arch=ARCH, policy=policy, mesh=list(dims),
+                    wire="auto", quantize=False, sync="blocking")
+        add(f"sync:{mlabel}:tree:blocking", **dict(base, layout="tree"))
+        for q in (False, True):
+            tag = ":q" if q else ""
+            add(f"sync:{mlabel}:flat:blocking{tag}",
+                **dict(base, layout="flat", quantize=q))
+            add(f"sync:{mlabel}:flat_sharded:blocking{tag}",
+                **dict(base, layout="flat_sharded", quantize=q))
+            add(f"sync:{mlabel}:flat_sharded:partial{tag}",
+                **dict(base, layout="flat_sharded", sync="partial",
+                       quantize=q))
+        # the overlap halves, quantized (the production overlap config)
+        add(f"sync:{mlabel}:flat_sharded:begin:q",
+            **dict(base, layout="flat_sharded", sync="begin", quantize=True))
+        add(f"sync:{mlabel}:flat_sharded:apply:q",
+            **dict(base, layout="flat_sharded", sync="apply", quantize=True))
+        # int8-on-every-wire ring (implies quantize; flat layouts only)
+        add(f"sync:{mlabel}:flat_sharded:blocking:ring-int8",
+            **dict(base, layout="flat_sharded", wire="ring-int8",
+                   quantize=True))
+
+    # round programs: dp mesh only (the fsdp sync paths are covered above;
+    # round lowering is the expensive half of the matrix)
+    rbase = dict(kind="round", arch=ARCH, policy="dp", mesh=[4, 2],
+                 wire="auto", donate=True, h=2)
+    add("round:dp4x2:tree:blocking", **dict(rbase, layout="tree",
+                                            quantize=False, sync="blocking"))
+    add("round:dp4x2:flat_sharded:blocking:q",
+        **dict(rbase, layout="flat_sharded", quantize=True, sync="blocking"))
+    for d in (0, 1, 2):
+        add(f"round:dp4x2:flat_sharded:overlap:d{d}:q",
+            **dict(rbase, layout="flat_sharded", quantize=True,
+                   sync="overlap", overlap_depth=d))
+
+    # compile-cache key spaces (static; no lowering)
+    cbase = dict(kind="cache", h_base=4, total_steps=3000, workers=8)
+    add("cache:blocking:w8", **dict(cbase, sync="blocking"))
+    add("cache:partial:w8", **dict(cbase, sync="partial"))
+    for d in (0, 1, 2):
+        add(f"cache:overlap:d{d}:w8", **dict(cbase, sync="overlap",
+                                             overlap_depth=d))
+    return out
+
+
+# --------------------------------------------------------------------------
+# lowering one point
+# --------------------------------------------------------------------------
+
+def _run_cfg(cfg):
+    from repro.configs.base import RunConfig
+
+    return RunConfig(sharding=cfg["policy"],
+                     sync_quantize=bool(cfg.get("quantize")),
+                     sync_wire=cfg.get("wire", "auto"))
+
+
+def _model_cfg(cfg):
+    from repro.configs import registry
+
+    return registry.get_smoke_config(cfg["arch"])
+
+
+def _lower_sync(cfg) -> dict:
+    import jax
+
+    from repro.launch import hlo_analysis as H
+    from repro.launch.shapes import build_calib_case
+
+    mesh = _mesh_of(cfg["mesh"])
+    case = build_calib_case(_model_cfg(cfg), "train_4k", mesh,
+                            policy=cfg["policy"], run_cfg=_run_cfg(cfg),
+                            fn_kind="sync", layout=cfg["layout"],
+                            sync=cfg["sync"])
+    with mesh:
+        compiled = jax.jit(case.fn, in_shardings=case.in_shardings,
+                           out_shardings=case.out_shardings
+                           ).lower(*case.args).compile()
+    hlo = compiled.as_text()
+    rec = H.payload_profile(hlo, n_leaves=case.meta["n_leaves"])
+    rec["n_buckets"] = case.meta["n_buckets"]
+    rec["workers"] = case.meta["w"]
+    rec["host_callback_lines"] = H.host_callbacks(hlo)
+    rec["degenerate_collectives"] = H.degenerate_collectives(hlo)
+    return rec
+
+
+def _lower_round(cfg, donate: bool | None = None) -> dict:
+    import jax
+
+    from repro.launch import hlo_analysis as H
+    from repro.launch.shapes import build_round_case
+
+    mesh = _mesh_of(cfg["mesh"])
+    donate = cfg.get("donate", False) if donate is None else donate
+    case = build_round_case(_model_cfg(cfg), mesh, policy=cfg["policy"],
+                            run_cfg=_run_cfg(cfg), h=cfg.get("h", 2),
+                            layout=cfg["layout"], sync=cfg["sync"],
+                            overlap_depth=cfg.get("overlap_depth", 0))
+    # mirror RoundEngine._program: overlap rounds donate the pending too
+    donate_argnums = (0, 1) if cfg["sync"] == "overlap" else (0,)
+    jit_kw = {"donate_argnums": donate_argnums} if donate else {}
+    with mesh:
+        compiled = jax.jit(case.fn, in_shardings=case.in_shardings,
+                           out_shardings=case.out_shardings,
+                           **jit_kw).lower(*case.args).compile()
+    hlo = compiled.as_text()
+    n_leaves = len(jax.tree.leaves(case.args[0]["params"]))
+    rec = H.payload_profile(hlo, n_leaves=n_leaves)
+    rec["workers"] = case.meta["w"]
+    rec["host_callback_lines"] = H.host_callbacks(hlo)
+    rec["degenerate_collectives"] = H.degenerate_collectives(hlo)
+    aliases = H.donation_aliases(hlo)
+    rec["donation_pairs"] = len(aliases)
+    # the floor is the STATE leaves only: losing a params/opt alias doubles
+    # device memory, but a donated overlap pending may legitimately fail to
+    # alias (at depth 0 the input pending stays live across the begin/apply
+    # splice, so XLA keeps it).  Deliberately independent of how THIS
+    # lowering donated, so the self-test's dropped-donation mutant still
+    # owes the config's floor.
+    rec["expected_alias_min"] = len(jax.tree.leaves(case.args[0]))
+    return rec
+
+
+def _enumerate_cache(cfg) -> dict:
+    from repro.configs.base import RunConfig
+    from repro.core import schedules
+    from repro.core.engine import enumerate_program_keys, program_bound
+    from repro.optim.lr import make_lr_fn
+
+    run_cfg = RunConfig(h_base=cfg["h_base"], total_steps=cfg["total_steps"])
+    lr_fn = make_lr_fn(run_cfg)
+    keys = enumerate_program_keys(run_cfg, lr_fn, sync=cfg["sync"],
+                                  overlap_depth=cfg.get("overlap_depth", 0),
+                                  workers=cfg["workers"])
+    h_max = max(h for _, h in schedules.rounds(run_cfg, lr_fn))
+    limit = program_bound(h_max) + (1 if cfg["sync"] == "overlap" else 0)
+    return {"program_keys": [list(k) for k in keys],
+            "program_count": len(keys), "program_limit": limit,
+            "h_max": h_max}
+
+
+_FINGERPRINT_FIELDS = (
+    "collective_counts", "bytes_on_wire", "payload_all_reduce_ops",
+    "amax_fold_ops", "amax_fold_bytes", "reduce_scatter_ops",
+    "all_gather_ops", "collective_permute_ops", "payload_bytes_by_dtype",
+    "payload_ops_by_dtype", "n_buckets", "n_leaves", "workers",
+    "donation_pairs", "expected_alias_min", "program_count",
+    "program_limit",
+)
+
+
+def audit_one(cfg: dict) -> dict:
+    """Lower (or statically enumerate) one config and produce its
+    fingerprint entry: rule verdicts + the measured surface."""
+    kind = cfg["kind"]
+    if kind == "sync":
+        rec = _lower_sync(cfg)
+    elif kind == "round":
+        rec = _lower_round(cfg)
+    elif kind == "cache":
+        rec = _enumerate_cache(cfg)
+    else:
+        raise ValueError(f"unknown audit kind {kind!r}")
+    verdicts = R.evaluate(cfg, rec)
+    entry = {"config": cfg, "rules": verdicts,
+             "rules_failed": R.failed(verdicts)}
+    for f in _FINGERPRINT_FIELDS:
+        if f in rec:
+            entry[f] = rec[f]
+    return entry
+
+
+def run_audit(keys=None) -> dict:
+    m = matrix()
+    if keys:
+        unknown = [k for k in keys if k not in m]
+        if unknown:
+            raise KeyError(f"unknown audit config(s) {unknown}; "
+                           f"see --list for the matrix")
+        m = {k: m[k] for k in keys}
+    return {"schema": SCHEMA,
+            "configs": {k: audit_one(cfg) for k, cfg in sorted(m.items())}}
+
+
+# --------------------------------------------------------------------------
+# baseline diff
+# --------------------------------------------------------------------------
+
+_MONOTONE_UP_IS_BAD = (
+    "payload_all_reduce_ops", "reduce_scatter_ops", "all_gather_ops",
+    "collective_permute_ops", "amax_fold_ops", "bytes_on_wire",
+    "program_count",
+)
+
+
+def diff_baseline(fresh: dict, baseline: dict):
+    """(regressions, notes): per-rule / per-counter comparison of a fresh
+    audit against the committed baseline.  Regressions fail CI; notes are
+    improvements or additions that warrant --update-baseline."""
+    regressions, notes = [], []
+    bcfg = baseline.get("configs", {})
+    fcfg = fresh.get("configs", {})
+    for key in sorted(bcfg):
+        if key not in fcfg:
+            regressions.append(f"{key}: config dropped from the audit matrix")
+            continue
+        b, f = bcfg[key], fcfg[key]
+        for rule in sorted(b.get("rules", {})):
+            bv = b["rules"][rule]
+            fv = f.get("rules", {}).get(rule)
+            if fv is None:
+                regressions.append(f"{key}: rule {rule} no longer evaluated")
+                continue
+            if bv["ok"] and not fv["ok"]:
+                for viol in fv["violations"] or ["(no detail)"]:
+                    regressions.append(f"{key}: {rule}: {viol}")
+            elif not bv["ok"] and fv["ok"]:
+                notes.append(f"{key}: {rule} now passes")
+        for field in _MONOTONE_UP_IS_BAD:
+            if field in b and field in f:
+                if f[field] > b[field]:
+                    regressions.append(
+                        f"{key}: {field} grew {b[field]} -> {f[field]}")
+                elif f[field] < b[field]:
+                    notes.append(
+                        f"{key}: {field} shrank {b[field]} -> {f[field]}")
+        bd = set(b.get("payload_ops_by_dtype", {}))
+        fd = set(f.get("payload_ops_by_dtype", {}))
+        if fd - bd:
+            regressions.append(
+                f"{key}: new payload dtype(s) on the wire: {sorted(fd - bd)}")
+        if "donation_pairs" in b:
+            if f.get("donation_pairs", 0) < b["donation_pairs"]:
+                regressions.append(
+                    f"{key}: donation_pairs fell {b['donation_pairs']} -> "
+                    f"{f.get('donation_pairs', 0)}")
+    for key in sorted(set(fcfg) - set(bcfg)):
+        notes.append(f"{key}: new config (not in baseline; "
+                     "run --update-baseline to commit it)")
+    return regressions, notes
+
+
+def load_baseline(path: str | None = None) -> dict:
+    with open(path or BASELINE_PATH, encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+# --------------------------------------------------------------------------
+# mutation self-test — the rules must have teeth
+# --------------------------------------------------------------------------
+
+_INJECTED_AR = ("  %mut = f32[999424]{0} all-reduce(f32[999424]{0} %p), "
+                "replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add\n")
+
+_BAD_SOURCE = '''
+def check(x):
+    assert x > 0, x
+    if x > 10:
+        raise Exception("too big")
+    return {"schema": "bogus_record/v1", "x": x}
+'''
+
+_CLEAN_SOURCE = '''
+from repro.errors import ConfigError
+
+
+def check(x):
+    if x <= 0:
+        raise ConfigError(f"x must be positive, got {x}")
+    return {"schema": "controller_trace/v1", "x": x}
+'''
+
+
+def self_test() -> list[str]:
+    """Prove each rule trips on a deliberately broken program.  Returns
+    failure strings (empty = every mutation was caught and every clean
+    fixture passed)."""
+    import jax
+
+    from repro.launch import hlo_analysis as H
+
+    failures: list[str] = []
+
+    # 1. injected payload all-reduce must trip collective-budget (and the
+    #    mutant's f32 payload must trip wire-payload-dtype)
+    cfg = matrix()["sync:dp4x2:flat_sharded:blocking:q"]
+    mesh = _mesh_of(cfg["mesh"])
+    from repro.launch.shapes import build_calib_case
+
+    case = build_calib_case(_model_cfg(cfg), "train_4k", mesh,
+                            policy=cfg["policy"], run_cfg=_run_cfg(cfg),
+                            fn_kind="sync", layout=cfg["layout"],
+                            sync=cfg["sync"])
+    with mesh:
+        hlo = jax.jit(case.fn, in_shardings=case.in_shardings,
+                      out_shardings=case.out_shardings
+                      ).lower(*case.args).compile().as_text()
+
+    def profile(text):
+        rec = H.payload_profile(text, n_leaves=case.meta["n_leaves"])
+        rec["n_buckets"] = case.meta["n_buckets"]
+        rec["workers"] = case.meta["w"]
+        return rec
+
+    clean = R.evaluate(cfg, profile(hlo))
+    if R.failed(clean):
+        failures.append(f"clean sync program fails rules: {R.failed(clean)}")
+    mutated = R.evaluate(cfg, profile(hlo + _INJECTED_AR))
+    if mutated["collective-budget"]["ok"]:
+        failures.append("injected payload all-reduce NOT caught by "
+                        "collective-budget")
+    if mutated["wire-payload-dtype"]["ok"]:
+        failures.append("injected f32 payload NOT caught by "
+                        "wire-payload-dtype")
+
+    # 2. dropped donation must trip donation-aliasing
+    rcfg = matrix()["round:dp4x2:flat_sharded:blocking:q"]
+    with_donation = R.evaluate(rcfg, _lower_round(rcfg, donate=True))
+    if not with_donation["donation-aliasing"]["ok"]:
+        failures.append("donated round fails donation-aliasing: "
+                        + "; ".join(
+                            with_donation["donation-aliasing"]["violations"]))
+    without = R.evaluate(rcfg, _lower_round(rcfg, donate=False))
+    if without["donation-aliasing"]["ok"]:
+        failures.append("dropped donation NOT caught by donation-aliasing")
+
+    # 3. the source lint must flag a bare assert, a generic raise and an
+    #    unregistered schema — and pass the typed-error rewrite
+    bad = {v.rule for v in source_lint.lint_source(_BAD_SOURCE, "fixture.py")}
+    for rule in ("bare-assert", "raise-generic", "unregistered-schema"):
+        if rule not in bad:
+            failures.append(f"lint fixture NOT caught by {rule}")
+    clean_lint = source_lint.lint_source(_CLEAN_SOURCE, "fixture.py")
+    if clean_lint:
+        failures.append("clean lint fixture flagged: "
+                        + "; ".join(v.render() for v in clean_lint))
+    return failures

@@ -1,0 +1,40 @@
+"""Central registry of audit-record schema identifiers.
+
+Every versioned record the repo emits (controller traces, bench
+rows, serving weight manifests, audit fingerprints, ...) tags itself
+with a ``"<name>/v<N>"`` string. This module is the single source of
+truth for which identifiers exist: the source lint
+(``repro.analysis.source_lint``) flags any ``*/vN`` literal in
+``src/repro/`` that is not registered here, so a typo'd or ad-hoc
+schema tag cannot ship silently.
+
+Adding a new record kind = add one entry here (with a one-line note of
+where it is produced) and use the constant from the producing module.
+"""
+
+from __future__ import annotations
+
+import re
+
+# name -> where it is produced / what it tags.
+SCHEMAS: dict[str, str] = {
+    "controller_trace/v1": "core/controller.py — adaptive controller per-round decision trace",
+    "bench_sync/v1": "launch/autotune.py — sync-plan bench rows (BENCH_sync.json)",
+    "bench_sync_trajectory/v1": "launch/autotune.py — CI perf-trajectory append artifact",
+    "serving_weights/v1": "launch/weights.py — published hot-swap weight manifests",
+    "fig2_ab_verdict/v1": "benchmarks/fig2_generalization.py — adaptive-vs-QSR A/B verdict",
+    "audit_fingerprint/v1": "analysis/audit.py — static HLO audit fingerprints + baseline",
+}
+
+# A schema tag is the *full* string literal, e.g. "controller_trace/v1".
+SCHEMA_RE = re.compile(r"[a-z0-9_]+/v\d+")
+
+
+def is_registered(tag: str) -> bool:
+    return tag in SCHEMAS
+
+
+def looks_like_schema(text: str) -> bool:
+    """True if ``text`` is exactly a schema-shaped tag (used by the lint
+    to decide which string literals must be registered)."""
+    return bool(SCHEMA_RE.fullmatch(text))

@@ -1,0 +1,144 @@
+"""AST source lint for ``src/repro/`` library code.
+
+Three hazard classes, each of which has bitten this repo before:
+
+* ``bare-assert`` — ``assert`` used for runtime validation in library
+  code. Stripped under ``python -O``, turning misconfigurations into
+  silent corruption (fixed piecemeal in PRs 4/5/7 via ``TopologyError``,
+  ``PendingSyncError``, ``CheckpointError``; this lint closes the class).
+  A line may opt out with a ``# lint: allow-assert`` comment — reserved
+  for asserts that restate an invariant already enforced upstream and
+  that sit on a hot trace path.
+* ``raise-generic`` — ``raise Exception(...)`` / ``raise
+  AssertionError(...)`` / ``raise BaseException(...)`` where the repo
+  has a typed error hierarchy (``repro.errors`` and the subsystem
+  errors next to their modules).
+* ``unregistered-schema`` — a ``"<name>/vN>"`` record-schema string
+  literal that is not registered in ``repro.analysis.schemas.SCHEMAS``.
+
+Tests are exempt (only ``src/repro`` is walked); the schema registry
+itself is exempt from the schema rule.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Iterable
+
+from repro.analysis.schemas import SCHEMAS, looks_like_schema
+
+ALLOW_ASSERT_MARK = "lint: allow-assert"
+_GENERIC_RAISES = ("Exception", "AssertionError", "BaseException")
+
+LINT_RULES = {
+    "bare-assert": "assert used for runtime validation (stripped under python -O)",
+    "raise-generic": "raise Exception/AssertionError where a repo error class exists",
+    "unregistered-schema": "*/vN schema literal missing from analysis/schemas.SCHEMAS",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _raised_name(node: ast.Raise) -> str | None:
+    exc = node.exc
+    if isinstance(exc, ast.Call):
+        exc = exc.func
+    if isinstance(exc, ast.Name):
+        return exc.id
+    return None
+
+
+def lint_source(
+    text: str,
+    path: str = "<memory>",
+    *,
+    registered: Iterable[str] | None = None,
+    skip_schema_rule: bool = False,
+) -> list[LintViolation]:
+    """Lint one module's source text; returns violations in line order."""
+    registered = set(SCHEMAS if registered is None else registered)
+    lines = text.splitlines()
+    tree = ast.parse(text, filename=path)
+    out: list[LintViolation] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            raw = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+            if ALLOW_ASSERT_MARK in raw:
+                continue
+            out.append(
+                LintViolation(
+                    path,
+                    node.lineno,
+                    "bare-assert",
+                    "bare assert in library code; raise a typed error from "
+                    "repro.errors (asserts vanish under python -O)",
+                )
+            )
+        elif isinstance(node, ast.Raise):
+            name = _raised_name(node)
+            if name in _GENERIC_RAISES:
+                out.append(
+                    LintViolation(
+                        path,
+                        node.lineno,
+                        "raise-generic",
+                        f"raise {name}: use a typed error class "
+                        "(repro.errors or a subsystem error)",
+                    )
+                )
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            if not skip_schema_rule and looks_like_schema(node.value):
+                if node.value not in registered:
+                    out.append(
+                        LintViolation(
+                            path,
+                            node.lineno,
+                            "unregistered-schema",
+                            f'schema tag "{node.value}" is not registered in '
+                            "repro.analysis.schemas.SCHEMAS",
+                        )
+                    )
+    out.sort(key=lambda v: (v.line, v.rule))
+    return out
+
+
+def _iter_py_files(root: str) -> Iterable[str]:
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def lint_paths(paths: Iterable[str]) -> list[LintViolation]:
+    out: list[LintViolation] = []
+    for p in paths:
+        with open(p, encoding="utf-8") as fh:
+            text = fh.read()
+        skip_schema = os.path.basename(p) == "schemas.py"
+        out.extend(lint_source(text, p, skip_schema_rule=skip_schema))
+    return out
+
+
+def repo_src_root() -> str:
+    """The src/repro directory this installed package lives in."""
+    import repro
+
+    # repro is a namespace package: no __init__.py, so __file__ is None
+    return os.path.abspath(list(repro.__path__)[0])
+
+
+def lint_repo(src_root: str | None = None) -> list[LintViolation]:
+    root = repo_src_root() if src_root is None else src_root
+    return lint_paths(_iter_py_files(root))

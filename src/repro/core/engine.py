@@ -114,6 +114,7 @@ from repro.core.sync import (make_sync, make_sync_apply, make_sync_begin,
                              make_sync_partial)
 from repro.data.synthetic import (TokenStream, device_batch_fn,
                                   effective_batch_view, make_train_batch)
+from repro.errors import ConfigError
 from repro.models import api, common as cm, param as pm
 
 Pytree = Any
@@ -198,6 +199,31 @@ def program_bound(h_max: int) -> int:
 def max_programs(run_cfg, lr_fn) -> int:
     """Upper bound on compiled round programs for a full schedule."""
     return program_bound(max(h for _, h in schedules.rounds(run_cfg, lr_fn)))
+
+
+def enumerate_program_keys(run_cfg, lr_fn, *, sync: str = "blocking",
+                           mode: str = "bucketed", overlap_depth: int = 0,
+                           workers: int = 1) -> list[tuple]:
+    """Statically enumerate the compile-cache keys a full schedule visits,
+    in first-visit order — the lowering hook behind the static audit's
+    compile-cache-bound rule (repro.analysis.rules), with zero compiles.
+
+    Mirrors `RoundEngine._program`'s key derivation exactly: overlap keys
+    on (hp, apply_pending, depth, W) — the first round of a run has no
+    pending sync, every later round does — everything else on (hp, W).
+    For a bucketed run the count must stay within `program_bound(Hmax)`
+    (+1 under overlap for the pending-free first-round program)."""
+    keys: list[tuple] = []
+    pending = False
+    for _, h in schedules.rounds(run_cfg, lr_fn):
+        hp = bucket_pow2(h) if mode == "bucketed" else h
+        key = ((hp, pending, overlap_depth, workers) if sync == "overlap"
+               else (hp, workers))
+        if key not in keys:
+            keys.append(key)
+        if sync == "overlap":
+            pending = True
+    return keys
 
 
 # --------------------------------------------------------------------------
@@ -545,27 +571,37 @@ class RoundEngine:
                  donate: bool | None = None,
                  batch_fn: Callable | None = None,
                  adaptive_batch: bool = False):
-        assert mode in ("bucketed", "legacy"), mode
-        assert data in ("device", "host"), data
-        assert layout in ("tree", "flat", "flat_sharded"), layout
-        assert sync in ("blocking", "overlap", "partial"), sync
-        assert overlap_depth >= 0, overlap_depth
-        assert mesh is None or layout == "flat_sharded", \
-            "a mesh drives the explicit-collective sync: layout=flat_sharded"
+        if mode not in ("bucketed", "legacy"):
+            raise ConfigError(f"unknown engine mode {mode!r}")
+        if data not in ("device", "host"):
+            raise ConfigError(f"unknown data source {data!r}")
+        if layout not in ("tree", "flat", "flat_sharded"):
+            raise ConfigError(f"unknown param layout {layout!r}")
+        if sync not in ("blocking", "overlap", "partial"):
+            raise ConfigError(f"unknown sync mode {sync!r}")
+        if overlap_depth < 0:
+            raise ConfigError(f"overlap_depth must be >= 0, got {overlap_depth}")
+        if mesh is not None and layout != "flat_sharded":
+            raise ConfigError(
+                "a mesh drives the explicit-collective sync: layout=flat_sharded")
         if mesh is not None:
             got = pm.worker_count(policy, mesh)
-            assert got == workers, \
-                f"policy {policy!r} on this mesh has {got} workers, " \
-                f"engine built with {workers}"
+            if got != workers:
+                raise ConfigError(
+                    f"policy {policy!r} on this mesh has {got} workers, "
+                    f"engine built with {workers}")
         self.mesh, self.policy = mesh, policy
-        assert sync == "blocking" or mode == "bucketed", \
-            "overlap/partial sync runs through the bucketed program"
-        assert batch_fn is None or data == "host", \
-            "batch_fn is a host-data source; pass data='host'"
-        assert cfg.family != "vision" or (data == "host" and batch_fn), \
-            "vision configs need data='host' and an image batch_fn"
-        assert not adaptive_batch or mode == "bucketed", \
-            "the traced effective-batch lane rides the bucketed programs"
+        if sync != "blocking" and mode != "bucketed":
+            raise ConfigError(
+                "overlap/partial sync runs through the bucketed program")
+        if batch_fn is not None and data != "host":
+            raise ConfigError("batch_fn is a host-data source; pass data='host'")
+        if cfg.family == "vision" and not (data == "host" and batch_fn):
+            raise ConfigError(
+                "vision configs need data='host' and an image batch_fn")
+        if adaptive_batch and mode != "bucketed":
+            raise ConfigError(
+                "the traced effective-batch lane rides the bucketed programs")
         self.cfg, self.run_cfg = cfg, run_cfg
         self.workers, self.b_loc, self.seq, self.seed = workers, b_loc, seq, seed
         self.mode, self.data, self.layout = mode, data, layout

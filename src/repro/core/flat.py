@@ -52,6 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.errors import LayoutError
+
 Pytree = Any
 
 
@@ -76,7 +78,8 @@ class FlatParamSpace:
 
     def __init__(self, tree: Pytree):
         leaves, self.treedef = jax.tree.flatten(tree)
-        assert leaves, "empty params pytree"
+        if not leaves:
+            raise LayoutError("empty params pytree")
         self._leaves: list[_Leaf] = []
         sizes: dict[str, int] = {}
         order: dict[str, list[int]] = {}
@@ -126,14 +129,20 @@ class FlatParamSpace:
         per leaf (e.g. fp32 moments of bf16 params); within a bucket all
         mirror leaves must agree so the buffer stays homogeneous."""
         leaves, treedef = jax.tree.flatten(tree)
-        assert treedef == self.treedef, (treedef, self.treedef)
+        if treedef != self.treedef:
+            raise LayoutError(
+                f"pytree structure {treedef} does not match the spec's "
+                f"{self.treedef}")
         out = {}
         for b in self.buckets:
             parts = []
             for i in self._order[b]:
                 x = leaves[i]
                 lf = self._leaves[i]
-                assert tuple(x.shape[lead:]) == lf.shape, (x.shape, lf.shape)
+                if tuple(x.shape[lead:]) != lf.shape:
+                    raise LayoutError(
+                        f"leaf {i} shape {tuple(x.shape)} (lead={lead}) does "
+                        f"not match the spec's {lf.shape}")
                 parts.append(jnp.reshape(x, x.shape[:lead] + (lf.size,)))
             out[b] = parts[0] if len(parts) == 1 else \
                 jnp.concatenate(parts, axis=lead)
@@ -189,7 +198,8 @@ class ShardedFlatSpace(FlatParamSpace):
                  worker_axes: tuple[str, ...] = (),
                  shard_axes: tuple[str, ...] = ()):
         super().__init__(tree)
-        assert shards >= 1, shards
+        if shards < 1:
+            raise LayoutError(f"shards must be >= 1, got {shards}")
         self.shards = shards
         self.mesh = mesh
         self.worker_axes = tuple(worker_axes)

@@ -90,6 +90,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.errors import ConfigError, LayoutError
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -399,7 +400,10 @@ def _ring_quantized_begin(spec, params, anchor):
         for b in buckets:
             d = p[b].astype(jnp.float32) - a[b].astype(jnp.float32)[None]
             n_loc = d.shape[1]
-            assert n_loc % w == 0, (b, n_loc, w)  # spec pads to W*S chunks
+            if n_loc % w != 0:  # spec pads to W*S chunks
+                raise LayoutError(
+                    f"ring bucket {b!r}: shard length {n_loc} not divisible "
+                    f"by {w} workers")
             dc = d[0].reshape(w, n_loc // w)
             # seed: the partial destined for worker (i-1) mod W
             acc = jnp.take(dc, (i - 1) % w, axis=0)
@@ -792,3 +796,27 @@ def make_sync_partial(run_cfg, spec=None):
         return apply_(state, begin(state, mask))
 
     return sync_partial
+
+
+SYNC_PROGRAMS = ("blocking", "partial", "begin", "apply")
+
+
+def sync_program(run_cfg, spec=None, program: str = "blocking"):
+    """The lowering seam for static analysis: one callable per sync
+    sub-program, named.  `blocking` and `partial` are the whole-sync
+    callables; `begin`/`apply` are the overlap halves — `begin` is the
+    scatter leg a round boundary launches, `apply` the gather leg hidden
+    behind the next round's first local steps.  The audit CLI
+    (launch/audit.py) AOT-lowers each of these per (layout, wire, mesh)
+    and evaluates the declarative rule registry against the HLO; nothing
+    here executes."""
+    if program == "blocking":
+        return make_sync(run_cfg, spec=spec)
+    if program == "partial":
+        return make_sync_partial(run_cfg, spec=spec)
+    if program == "begin":
+        return make_sync_begin(run_cfg, spec=spec)
+    if program == "apply":
+        return make_sync_apply(run_cfg, spec=spec)
+    raise ConfigError(
+        f"unknown sync program {program!r}; pick from {SYNC_PROGRAMS}")

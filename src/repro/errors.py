@@ -1,0 +1,31 @@
+"""Typed error hierarchy for the repro library.
+
+Library code must raise these (or the domain-specific subclasses that
+live next to their subsystems: ``TopologyError``, ``PendingSyncError``,
+``MembershipError``, ``CheckpointError``) instead of bare ``assert`` —
+asserts vanish under ``python -O``, which turned real misconfigurations
+into silent corruption three separate times before the source lint
+(``repro.analysis.source_lint``) made the pattern unrepresentable.
+
+Everything here subclasses ``ValueError`` so existing
+``except ValueError`` call sites keep working.
+"""
+
+
+class ReproError(Exception):
+    """Root of the repro error hierarchy."""
+
+
+class ConfigError(ReproError, ValueError):
+    """Invalid run/launch configuration (bad flag combination, unknown
+    mode, mismatched engine reuse, ...)."""
+
+
+class ShapeError(ReproError, ValueError):
+    """A shape/dtype contract was violated (kernel operands, model
+    inputs, parameter definitions)."""
+
+
+class LayoutError(ReproError, ValueError):
+    """Flat/sharded parameter-layout misuse (wrong treedef, non-divisible
+    shard counts, empty param trees)."""

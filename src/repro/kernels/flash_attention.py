@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.errors import ShapeError
+
 NEG_INF = -1e30
 
 
@@ -89,7 +91,8 @@ def flash_attention(q, k, v, *, causal=True, window=0, prefix_len=0,
     """q [B,Sq,Hq,D]; k,v [B,Sk,Hkv,D] -> [B,Sq,Hq,D]."""
     b, sq, hq, d = q.shape
     _, sk, hkv, _ = k.shape
-    assert hq % hkv == 0
+    if hq % hkv != 0:
+        raise ShapeError(f"GQA needs Hq % Hkv == 0, got ({hq}, {hkv})")
     g = hq // hkv
     scale = scale if scale is not None else d ** -0.5
     window = int(window)
@@ -206,9 +209,11 @@ def flash_decode(q, k, v, *, causal=True, window=0, prefix_len=0, q_offset=0,
     [B,1,Hq,D].
     """
     b, sq, hq, d = q.shape
-    assert sq == 1, "flash_decode is the single-query kernel"
+    if sq != 1:
+        raise ShapeError(f"flash_decode is the single-query kernel, Sq={sq}")
     _, sk, hkv, _ = k.shape
-    assert hq % hkv == 0
+    if hq % hkv != 0:
+        raise ShapeError(f"GQA needs Hq % Hkv == 0, got ({hq}, {hkv})")
     g = hq // hkv
     scale = float(scale) if scale is not None else d ** -0.5
 

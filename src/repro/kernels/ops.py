@@ -15,6 +15,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.errors import ConfigError
 from repro.kernels import ref
 
 _BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "jnp")
@@ -22,7 +23,8 @@ _BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "jnp")
 
 def set_backend(name: str) -> None:
     global _BACKEND
-    assert name in ("jnp", "pallas", "interpret"), name
+    if name not in ("jnp", "pallas", "interpret"):
+        raise ConfigError(f"unknown kernel backend {name!r}")
     _BACKEND = name
 
 

@@ -8,6 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.errors import ShapeError
+
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
     dtype = x.dtype
@@ -50,7 +52,8 @@ def attention(q, k, v, *, causal=True, window=0, prefix_len=0, q_offset=0,
     """q [B,Sq,Hq,D]; k,v [B,Sk,Hkv,D]; GQA via head-group broadcast."""
     b, sq, hq, d = q.shape
     _, sk, hkv, _ = k.shape
-    assert hq % hkv == 0, (hq, hkv)
+    if hq % hkv != 0:
+        raise ShapeError(f"GQA needs Hq % Hkv == 0, got ({hq}, {hkv})")
     g = hq // hkv
     dtype = q.dtype
     scale = scale if scale is not None else d ** -0.5

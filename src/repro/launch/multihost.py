@@ -806,7 +806,10 @@ def spawn_workers(num_processes: int, *, total_devices: int = 8,
     (`_choose_coordinator_port`) and each worker's `initialize()` retries
     with backoff, so neither a probe race nor a slow coordinator fails the
     spawn outright."""
-    assert total_devices % num_processes == 0, (total_devices, num_processes)
+    if total_devices % num_processes != 0:
+        raise TopologyError(
+            f"{total_devices} simulated devices not divisible over "
+            f"{num_processes} processes")
     # a 1-process spawn needs no coordinator: it runs as a plain
     # single-process job (initialize() no-ops).  Wiring jax.distributed +
     # gloo around a single process that owns several devices deadlocks the

@@ -17,6 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import local_update as LU
+from repro.errors import ConfigError
 from repro.models import api, param as pm
 
 SDS = jax.ShapeDtypeStruct
@@ -213,9 +214,11 @@ def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
     the reduce_scatter leg leaves it (core/sync.py `pending_specs`), so the
     lowering proves the deferred gather stays a per-bucket all_gather and
     the in-flight payload stays worker-sharded across the program boundary."""
-    assert layout in ("tree", "flat", "flat_sharded"), layout
-    assert layout == "tree" or engine == "bucketed", \
-        "the flat layouts run through the RoundEngine's bucketed program"
+    if layout not in ("tree", "flat", "flat_sharded"):
+        raise ConfigError(f"unknown param layout {layout!r}")
+    if layout != "tree" and engine != "bucketed":
+        raise ConfigError(
+            "the flat layouts run through the RoundEngine's bucketed program")
     # real errors, not asserts: the dryrun is a launch-script surface that
     # runs under `python -O` — a stripped guard would silently lower the
     # blocking program and report the overlap case as ok
@@ -227,7 +230,9 @@ def _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes, h,
     w = pm.worker_count(policy, mesh)
     waxes = pm.worker_mesh_axes(policy, mesh)
     waxes = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
-    assert shape.global_batch % max(w, 1) == 0, (shape.global_batch, w)
+    if shape.global_batch % max(w, 1) != 0:
+        raise ConfigError(
+            f"global batch {shape.global_batch} not divisible by {w} workers")
     b_loc = shape.global_batch // max(w, 1)
     inner_data = "data" if policy == "fsdp" and _div(b_loc, sizes.get("data", 1)) else None
 
@@ -488,9 +493,14 @@ def with_depth(cfg, n_layers: int):
 
 def build_calib_case(cfg, shape_name: str, mesh, *, policy: str,
                      run_cfg: RunConfig | None = None, fn_kind: str,
-                     layout: str = "tree") -> Case:
+                     layout: str = "tree", sync: str = "blocking") -> Case:
     """Like build_case but for an explicitly-resized cfg and a specific
-    sub-program: local_step | sync | parallel_step | prefill | decode."""
+    sub-program: local_step | sync | parallel_step | prefill | decode.
+
+    fn_kind="sync" selects the sync sub-program via `sync`: "blocking"
+    (the composed whole-sync), "partial" (mask-carrying), or the overlap
+    halves "begin"/"apply" — the lowering matrix the static audit
+    (launch/audit.py) evaluates the rule registry against."""
     shape = SHAPES[shape_name]
     run_cfg = run_cfg or RunConfig(sharding=policy)
     dtype = jnp.bfloat16 if run_cfg.param_dtype == "bfloat16" else jnp.float32
@@ -512,17 +522,33 @@ def build_calib_case(cfg, shape_name: str, mesh, *, policy: str,
             state = _abstract_state(cfg, run_cfg, w, dtype)
             sspec = _state_specs(cfg, run_cfg, policy, mesh)
         if fn_kind == "sync":
-            from repro.core.sync import make_sync
-            sync = make_sync(run_cfg, spec=spec)
-            in_sh = (_ns(mesh, sspec),)
-            return Case(sync, (state,), in_sh, _ns(mesh, sspec),
-                        meta={"cfg": cfg, "fn_name": "sync", "w": w,
-                              "layout": layout,
-                              "n_leaves": (spec.n_leaves if spec else
-                                           len(jax.tree.leaves(
-                                               state["params"]))),
-                              "n_buckets": (len(spec.buckets) if spec
-                                            else None)})
+            from repro.core.sync import (SYNC_PROGRAMS, make_sync_begin,
+                                         pending_specs, sync_program)
+            if sync not in SYNC_PROGRAMS:
+                raise ConfigError(
+                    f"unknown sync program {sync!r}; pick from {SYNC_PROGRAMS}")
+            fn = sync_program(run_cfg, spec=spec, program=sync)
+            meta = {"cfg": cfg, "fn_name": f"sync_{sync}", "w": w,
+                    "layout": layout, "sync": sync,
+                    "n_leaves": (spec.n_leaves if spec else
+                                 len(jax.tree.leaves(state["params"]))),
+                    "n_buckets": (len(spec.buckets) if spec else None)}
+            ssh = _ns(mesh, sspec)
+            mesh_carrying = getattr(spec, "mesh", None) is not None
+            if sync == "blocking":
+                return Case(fn, (state,), (ssh,), ssh, meta=meta)
+            if sync == "partial":
+                mask = SDS((w,), jnp.float32)
+                msh = NamedSharding(mesh, P()) if mesh_carrying else None
+                return Case(fn, (state, mask), (ssh, msh), ssh, meta=meta)
+            # the overlap halves: `begin` produces the in-flight pending at
+            # the sharding the reduce_scatter leaves it; `apply` consumes it
+            pending = jax.eval_shape(make_sync_begin(run_cfg, spec), state)
+            pend_sh = (_ns(mesh, pending_specs(run_cfg, spec))
+                       if mesh_carrying else None)
+            if sync == "begin":
+                return Case(fn, (state,), (ssh,), pend_sh, meta=meta)
+            return Case(fn, (state, pending), (ssh, pend_sh), ssh, meta=meta)
         batch = _batch_abstract(cfg, (w, b_loc), shape.seq_len)
         bspec = _batch_specs(cfg, 0, waxes, inner_data)
         step = LU.make_local_step(cfg, run_cfg, spec=spec)
@@ -541,3 +567,22 @@ def build_calib_case(cfg, shape_name: str, mesh, *, policy: str,
         return _decode_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes,
                             long=(shape.mode == "long_decode"))
     raise ValueError(fn_kind)
+
+
+def build_round_case(cfg, mesh, *, policy: str, run_cfg: RunConfig,
+                     h: int = 2, seq_len: int = 64, global_batch: int = 8,
+                     layout: str = "tree", sync: str = "blocking",
+                     overlap_depth: int = 0,
+                     engine: str = "bucketed") -> Case:
+    """A full round program for an explicit cfg at a small custom shape —
+    the static audit's round-level lowering hook (donation-aliasing,
+    no-host-callback, no-degenerate-replica-group run against exactly the
+    program the RoundEngine caches).  Same plumbing as build_case's train
+    path, without the SHAPES registry in the way."""
+    shape = InputShape(f"audit_{seq_len}x{global_batch}", seq_len,
+                       global_batch, "train")
+    dtype = jnp.bfloat16 if run_cfg.param_dtype == "bfloat16" else jnp.float32
+    sizes = pm.mesh_axis_sizes(mesh)
+    return _train_round_case(cfg, run_cfg, shape, mesh, policy, dtype, sizes,
+                             h, engine=engine, layout=layout, sync=sync,
+                             overlap_depth=overlap_depth)

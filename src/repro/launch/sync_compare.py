@@ -36,7 +36,9 @@ import json
 
 import jax
 
+from repro.analysis import rules
 from repro.configs.base import RunConfig
+from repro.errors import ConfigError
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_debug_mesh
 from repro.launch.shapes import build_calib_case
@@ -74,51 +76,25 @@ def compare(arch: str = "starcoder2-3b", *, smoke: bool = True,
                                out_shardings=case.out_shardings
                                ).lower(*case.args).compile()
         hlo = compiled.as_text()
-        counts = hlo_analysis.collective_counts(hlo)
-        nbytes = hlo_analysis.collective_bytes(hlo)
-        legs = hlo_analysis.collective_result_bytes(hlo)
-        # classify all-reduces: the quantized sharded sync is allowed ONE
-        # tiny scale collective — the amax fold, 4 bytes per model tensor
-        # (f32 per leaf, all buckets concatenated) — and zero payload
-        # (bucket-sized) all-reduces.  Anything bigger than the fold's exact
-        # size (+ alignment slack) counts as a payload all-reduce.
-        n_leaves = case.meta["n_leaves"]
-        fold_limit = 4 * n_leaves + 64
-        ops = hlo_analysis.collective_ops(hlo)
-        ars = [op for op in ops if op["kind"] == "all-reduce"]
-        fold = [op for op in ars if op["bytes_full"] <= fold_limit]
-        # payload vs scale-sized split across ALL kinds: the ring's per-hop
-        # f32 scales are scalar-sized ppermutes/gathers (4 bytes per hop /
-        # 4*W per gather), classified with the same fold threshold —
-        # everything bigger is wire payload and must carry the wire dtype
-        # (s8 for ring-int8: the acceptance proof)
-        payload = [op for op in ops if op["bytes_full"] > fold_limit]
-        by_dtype_bytes, by_dtype_ops = {}, {}
-        for op in payload:
-            by_dtype_bytes[op["dtype"]] = (by_dtype_bytes.get(op["dtype"], 0)
-                                           + op["bytes_full"])
-            by_dtype_ops[op["dtype"]] = by_dtype_ops.get(op["dtype"], 0) + 1
-        out[layout] = {
-            "collective_counts": counts,
-            "collective_bytes": {k: v for k, v in nbytes.items() if v},
-            "collective_leg_bytes": {k: v for k, v in legs.items() if v},
-            "all_reduce_ops": counts["all-reduce"],
-            "amax_fold_ops": len(fold),
-            "amax_fold_bytes": sum(op["bytes_full"] for op in fold),
-            "payload_all_reduce_ops": len(ars) - len(fold),
-            "reduce_scatter_ops": counts["reduce-scatter"],
-            "all_gather_ops": counts["all-gather"],
-            "bytes_on_wire": sum(v for k, v in nbytes.items() if k != "dci"),
-            "scatter_leg_bytes": legs["reduce-scatter"],
-            "rs_wire_bytes": nbytes["reduce-scatter"],
-            "ag_wire_bytes": nbytes["all-gather"],
-            "collective_permute_ops": counts["collective-permute"],
-            "permute_wire_bytes": nbytes["collective-permute"],
-            "payload_bytes_by_dtype": by_dtype_bytes,
-            "payload_ops_by_dtype": by_dtype_ops,
-            "n_leaves": n_leaves,
-            "n_buckets": case.meta["n_buckets"],
-        }
+        # the scale-vs-payload classification (the quantized sharded sync
+        # is allowed ONE tiny amax-fold all-reduce — 4 bytes per model
+        # tensor — and zero payload-sized ones; the ring's per-hop f32
+        # scales are scalar-sized and classified with the same threshold)
+        # lives in hlo_analysis.payload_profile, shared with the audit CLI
+        rec = hlo_analysis.payload_profile(hlo, n_leaves=case.meta["n_leaves"])
+        rec["n_buckets"] = case.meta["n_buckets"]
+        rec["workers"] = case.meta["w"]
+        rec["host_callback_lines"] = hlo_analysis.host_callbacks(hlo)
+        rec["degenerate_collectives"] = hlo_analysis.degenerate_collectives(hlo)
+        # attach the declarative rule verdicts: tests assert the layout
+        # acceptance claims through this one registry (repro.analysis.rules)
+        # instead of re-deriving counts per test file
+        rule_cfg = {"kind": "sync", "layout": layout, "sync": "blocking",
+                    "wire": wire, "quantize": quantize, "policy": policy,
+                    "workers": case.meta["w"]}
+        rec["rules"] = rules.evaluate(rule_cfg, rec)
+        rec["rules_failed"] = rules.failed(rec["rules"])
+        out[layout] = rec
     return out
 
 
@@ -271,7 +247,9 @@ def main() -> None:
         args.quantize = True        # the ring carries int8 codes by definition
     if args.param_layout:
         layouts = tuple(args.param_layout.split(","))
-        assert all(l in LAYOUTS for l in layouts), layouts
+        bad = [l for l in layouts if l not in LAYOUTS]
+        if bad:
+            raise ConfigError(f"unknown layouts {bad}; pick from {LAYOUTS}")
     else:
         layouts = LAYOUTS
     if args.wire == "ring-int8":

@@ -25,6 +25,7 @@ from repro.checkpoint import io as ckpt_io
 from repro.configs.base import RunConfig
 from repro.core import schedules
 from repro.core.engine import RoundEngine
+from repro.errors import ConfigError
 from repro.optim.lr import make_lr_fn
 
 
@@ -77,10 +78,11 @@ def train(cfg, run_cfg: RunConfig, *, workers: int, b_loc: int, seq: int,
                eng.overlap_depth)
         want = (cfg, run_cfg, workers, b_loc, seq, seed, engine, data,
                 layout, sync, overlap_depth)
-        assert got == want, \
-            "engine built with (cfg, run_cfg, workers, b_loc, seq, seed, " \
-            f"mode, data, layout, sync, overlap_depth)={got},\n" \
-            f"train() called with {want}"
+        if got != want:
+            raise ConfigError(
+                "engine built with (cfg, run_cfg, workers, b_loc, seq, seed, "
+                f"mode, data, layout, sync, overlap_depth)={got},\n"
+                f"train() called with {want}")
     state = eng.init_state()
     lr_fn = make_lr_fn(run_cfg)
 

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.errors import ShapeError
 from repro.kernels import ops as kops
 from repro.models.param import ParamDef
 
@@ -169,7 +170,8 @@ def attn_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
         ln = cache["k"].shape[1]
         per_batch = getattr(cache_pos, "ndim", 0) and jnp.ndim(cache_pos) > 0
         if per_batch:
-            assert not ring, "ragged positions + ring cache unsupported"
+            if ring:
+                raise ShapeError("ragged positions + ring cache unsupported")
             dus = jax.vmap(
                 lambda c, u, pp: jax.lax.dynamic_update_slice_in_dim(
                     c, u, pp, axis=0))

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.errors import ShapeError
 from repro.kernels import ops as kops
 from repro.models import common as cm
 from repro.models.param import ParamDef
@@ -60,7 +61,8 @@ def ssd_chunked(x, dt, A, B_, C_, D, chunk: int, initial_state=None):
     b, s, h, p = x.shape
     n = B_.shape[-1]
     q = min(chunk, s)
-    assert s % q == 0, (s, q)
+    if s % q != 0:
+        raise ShapeError(f"seq len {s} not divisible by chunk {q}")
     nc = s // q
     f32 = jnp.float32
 

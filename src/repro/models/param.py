@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.errors import ShapeError
+
 Pytree = Any
 
 
@@ -42,7 +44,10 @@ class ParamDef:
     scale: float = 1.0
 
     def __post_init__(self):
-        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        if len(self.shape) != len(self.axes):
+            raise ShapeError(
+                f"ParamDef shape {self.shape} and axes {self.axes} "
+                "must have equal rank")
 
 
 def _leaf_init(rng: jax.Array, d: ParamDef, dtype) -> jax.Array:

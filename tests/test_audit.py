@@ -1,0 +1,309 @@
+"""The static program auditor (src/repro/analysis/ + launch/audit.py).
+
+Three layers under test, none of which executes a collective:
+  * the declarative rule registry (analysis/rules.py) against synthetic
+    lowering records — each rule must pass its contract shape and trip on
+    the corresponding mutation;
+  * the AST source lint (analysis/source_lint.py) and the schema-tag
+    registry (analysis/schemas.py);
+  * the committed audit baseline (analysis/audit_baseline.json): parses,
+    carries the fingerprint schema, covers the full matrix, and records
+    zero rule failures — plus the diff engine's regression semantics.
+
+The full lower-everything matrix and the mutation self-test (which
+compiles real sync/round programs) run as subprocesses of
+`python -m repro.launch.audit`; the matrix half lives in the CI `static`
+job, the self-test is exercised here once.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import audit as A
+from repro.analysis import rules as R
+from repro.analysis import schemas as S
+from repro.analysis import source_lint as L
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _cli(*extra, timeout=120):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.audit", *extra],
+        capture_output=True, text=True, env=env, timeout=timeout)
+
+
+# ------------------------------------------------------------ source lint --
+
+def test_lint_flags_bare_assert_and_respects_marker():
+    hits = L.lint_source("def f(x):\n    assert x > 0, x\n", "a.py")
+    assert [v.rule for v in hits] == ["bare-assert"]
+    assert hits[0].line == 2
+    assert "a.py:2" in hits[0].render()
+    ok = L.lint_source(
+        "def f(x):\n    assert x > 0  # lint: allow-assert\n", "a.py")
+    assert ok == []
+
+
+def test_lint_flags_generic_raises_only():
+    bad = ("def f():\n    raise Exception('boom')\n"
+           "def g():\n    raise AssertionError\n")
+    assert sorted(v.line for v in L.lint_source(bad, "b.py")) == [2, 4]
+    assert {v.rule for v in L.lint_source(bad, "b.py")} == {"raise-generic"}
+    typed = ("from repro.errors import ConfigError\n"
+             "def f():\n    raise ConfigError('bad layout')\n"
+             "def g():\n    raise ValueError('fine too')\n")
+    assert L.lint_source(typed, "b.py") == []
+
+
+def test_lint_flags_unregistered_schema_strings():
+    bad = 'REC = {"schema": "mystery_record/v3"}\n'
+    hits = L.lint_source(bad, "c.py")
+    assert [v.rule for v in hits] == ["unregistered-schema"]
+    good = 'REC = {"schema": "controller_trace/v1"}\n'
+    assert L.lint_source(good, "c.py") == []
+    # non-schema-shaped strings never match
+    assert L.lint_source('X = "a/b"\nY = "path/void"\n', "c.py") == []
+
+
+def test_schema_registry_shapes_and_membership():
+    assert S.is_registered("audit_fingerprint/v1")
+    assert not S.is_registered("audit_fingerprint/v2")
+    for tag in S.SCHEMAS:
+        assert S.looks_like_schema(tag), tag
+    assert A.SCHEMA in S.SCHEMAS
+
+
+def test_lint_repo_clean():
+    """The library tree itself must lint clean — the satellite conversion
+    of bare asserts to typed errors is locked in here."""
+    violations = L.lint_repo()
+    assert violations == [], "\n".join(v.render() for v in violations)
+
+
+# ------------------------------------------- rules on synthetic records ---
+
+def _sharded_cfg(**kw):
+    cfg = dict(kind="sync", layout="flat_sharded", sync="blocking",
+               wire="auto", quantize=True, workers=4)
+    cfg.update(kw)
+    return cfg
+
+
+def _sharded_rec(**kw):
+    rec = dict(n_buckets=1, workers=4, n_leaves=13,
+               payload_all_reduce_ops=0, reduce_scatter_ops=1,
+               all_gather_ops=1, collective_permute_ops=0,
+               amax_fold_ops=1, collective_counts={},
+               payload_ops_by_dtype={"s16": 2},
+               host_callback_lines=[], degenerate_collectives=[])
+    rec.update(kw)
+    return rec
+
+
+def test_budget_rule_passes_clean_sharded_record():
+    verdicts = R.evaluate(_sharded_cfg(), _sharded_rec())
+    assert R.failed(verdicts) == []
+    assert verdicts["collective-budget"]["applies"]
+    assert verdicts["wire-payload-dtype"]["applies"]
+
+
+def test_budget_rule_trips_on_injected_payload_all_reduce():
+    verdicts = R.evaluate(_sharded_cfg(),
+                          _sharded_rec(payload_all_reduce_ops=1))
+    assert "collective-budget" in R.failed(verdicts)
+
+
+def test_budget_rule_trips_on_missing_gather_leg():
+    verdicts = R.evaluate(_sharded_cfg(), _sharded_rec(all_gather_ops=0))
+    assert "collective-budget" in R.failed(verdicts)
+
+
+def test_budget_rule_overlap_halves_split_rs_and_ag():
+    begin = R.evaluate(_sharded_cfg(sync="begin"),
+                       _sharded_rec(all_gather_ops=0))
+    assert R.failed(begin) == []
+    apply_ = R.evaluate(_sharded_cfg(sync="apply"),
+                        _sharded_rec(reduce_scatter_ops=0, amax_fold_ops=0))
+    assert R.failed(apply_) == []
+    # a gather appearing in the begin half is a violation
+    leaked = R.evaluate(_sharded_cfg(sync="begin"), _sharded_rec())
+    assert "collective-budget" in R.failed(leaked)
+
+
+def test_budget_rule_ring_wants_permute_hops_not_rs():
+    cfg = _sharded_cfg(wire="ring-int8")
+    rec = _sharded_rec(reduce_scatter_ops=0, all_gather_ops=0,
+                       collective_permute_ops=3, amax_fold_ops=0,
+                       payload_ops_by_dtype={"s8": 3})
+    assert R.failed(R.evaluate(cfg, rec)) == []
+    # W-1 hops per bucket is a floor: 2 hops for W=4 is a schedule bug
+    short = R.evaluate(cfg, dict(rec, collective_permute_ops=2))
+    assert "collective-budget" in R.failed(short)
+
+
+def test_budget_rule_tree_pays_per_leaf():
+    cfg = dict(kind="sync", layout="tree", sync="blocking", wire="auto",
+               quantize=False, workers=4)
+    ok = R.evaluate(cfg, dict(all_reduce_ops=13, n_leaves=13))
+    assert R.failed(ok) == []
+    fused = R.evaluate(cfg, dict(all_reduce_ops=1, n_leaves=13))
+    assert "collective-budget" in R.failed(fused)
+
+
+def test_budget_rule_flat_quantized_is_lower_bound():
+    cfg = dict(kind="sync", layout="flat", sync="blocking", wire="auto",
+               quantize=True, workers=4)
+    rec = dict(n_buckets=1, payload_all_reduce_ops=2, reduce_scatter_ops=0,
+               collective_permute_ops=0, collective_counts={})
+    assert R.failed(R.evaluate(cfg, rec)) == []  # GSPMD scale ARs allowed
+    exact = R.evaluate(dict(cfg, quantize=False), rec)
+    assert "collective-budget" in R.failed(exact)  # unquantized: exactly nb
+
+
+def test_wire_dtype_rule_trips_on_float_payload():
+    verdicts = R.evaluate(
+        _sharded_cfg(), _sharded_rec(payload_ops_by_dtype={"s16": 2,
+                                                           "f32": 1}))
+    assert "wire-payload-dtype" in R.failed(verdicts)
+    # ring: anything but s8 — even the auto wire's s16 — is a violation
+    ring = R.evaluate(_sharded_cfg(wire="ring-int8"),
+                      _sharded_rec(reduce_scatter_ops=0, all_gather_ops=0,
+                                   collective_permute_ops=3, amax_fold_ops=0,
+                                   payload_ops_by_dtype={"s16": 3}))
+    assert "wire-payload-dtype" in R.failed(ring)
+
+
+def test_donation_rule_floor_and_applicability():
+    cfg = dict(kind="round", donate=True)
+    ok = R.evaluate(cfg, dict(donation_pairs=5, expected_alias_min=5))
+    assert R.failed(ok) == []
+    lost = R.evaluate(cfg, dict(donation_pairs=4, expected_alias_min=5))
+    assert "donation-aliasing" in R.failed(lost)
+    undonated = R.evaluate(dict(cfg, donate=False),
+                           dict(donation_pairs=0, expected_alias_min=0))
+    assert not undonated["donation-aliasing"]["applies"]
+
+
+def test_cache_rule_duplicate_and_overflow():
+    cfg = dict(kind="cache")
+    ok = R.evaluate(cfg, dict(program_keys=[[1, 8], [2, 8]],
+                              program_limit=4))
+    assert R.failed(ok) == []
+    dup = R.evaluate(cfg, dict(program_keys=[[1, 8], [1, 8]],
+                               program_limit=4))
+    assert "compile-cache-bound" in R.failed(dup)
+    over = R.evaluate(cfg, dict(program_keys=[[h, 8] for h in range(9)],
+                                program_limit=4))
+    assert "compile-cache-bound" in R.failed(over)
+
+
+def test_hygiene_rules_pass_through_detector_lines():
+    cfg = dict(kind="round", donate=False)
+    rec = dict(host_callback_lines=["%cc = custom-call ... callback"],
+               degenerate_collectives=["%x = all-reduce ... {{0}}"],
+               donation_pairs=0, expected_alias_min=0)
+    failed = R.failed(R.evaluate(cfg, rec))
+    assert "no-host-callback" in failed
+    assert "no-degenerate-replica-group" in failed
+
+
+# ----------------------------------- cache enumeration vs the real engine --
+
+def test_cache_enumeration_stays_within_program_bound():
+    """The compile-cache-bound rule over the REAL key enumeration of a
+    3000-step QSR schedule — statically, zero compiles (core/engine
+    enumerate_program_keys mirrors RoundEngine._program's key)."""
+    m = A.matrix()
+    for key in ("cache:blocking:w8", "cache:partial:w8", "cache:overlap:d2:w8"):
+        cfg = m[key]
+        rec = A._enumerate_cache(cfg)
+        verdicts = R.evaluate(cfg, rec)
+        assert R.failed(verdicts) == [], (key, verdicts)
+        assert 0 < rec["program_count"] <= rec["program_limit"]
+    # overlap gets exactly one extra slot (the pending-free first round)
+    blocking = A._enumerate_cache(m["cache:blocking:w8"])
+    overlap = A._enumerate_cache(m["cache:overlap:d0:w8"])
+    assert overlap["program_limit"] == blocking["program_limit"] + 1
+
+
+# -------------------------------------------------- baseline + diff logic --
+
+def test_committed_baseline_covers_matrix_and_is_clean():
+    base = A.load_baseline()
+    assert base["schema"] == A.SCHEMA
+    assert sorted(base["configs"]) == sorted(A.matrix())
+    for key, entry in base["configs"].items():
+        assert entry["rules_failed"] == [], (key, entry["rules_failed"])
+
+
+def test_diff_baseline_regression_semantics():
+    base = {"configs": {
+        "k": {"rules": {"collective-budget": {"ok": True, "applies": True,
+                                              "violations": []}},
+              "bytes_on_wire": 100, "payload_ops_by_dtype": {"s16": 2},
+              "donation_pairs": 5},
+        "gone": {"rules": {}},
+    }}
+    fresh = {"configs": {
+        "k": {"rules": {"collective-budget": {"ok": False, "applies": True,
+                                              "violations": ["extra AR"]}},
+              "bytes_on_wire": 120,
+              "payload_ops_by_dtype": {"s16": 2, "f32": 1},
+              "donation_pairs": 4},
+        "new": {"rules": {}},
+    }}
+    regressions, notes = A.diff_baseline(fresh, base)
+    text = "\n".join(regressions)
+    assert "k: collective-budget: extra AR" in text
+    assert "bytes_on_wire grew 100 -> 120" in text
+    assert "new payload dtype" in text
+    assert "donation_pairs fell 5 -> 4" in text
+    assert "gone: config dropped" in text
+    assert any("new config" in n for n in notes)
+    # the improvement direction is a note, not a regression
+    regressions2, notes2 = A.diff_baseline(base, base)
+    assert regressions2 == [] and notes2 == []
+
+
+# ----------------------------------------------------------- CLI surface ---
+
+def test_cli_list_and_rules():
+    out = _cli("--list")
+    assert out.returncode == 0, out.stderr[-2000:]
+    keys = out.stdout.split()
+    assert "sync:dp4x2:flat_sharded:blocking:q" in keys
+    assert "round:dp4x2:flat_sharded:overlap:d2:q" in keys
+    assert "cache:blocking:w8" in keys
+    assert len(keys) == len(A.matrix())
+    rules_out = _cli("--rules")
+    assert rules_out.returncode == 0
+    for name in ("collective-budget", "wire-payload-dtype",
+                 "donation-aliasing", "compile-cache-bound",
+                 "no-host-callback", "no-degenerate-replica-group"):
+        assert name in rules_out.stdout, name
+
+
+def test_cli_unknown_config_is_an_error():
+    out = _cli("--config", "sync:nope")
+    assert out.returncode != 0
+    assert "sync:nope" in (out.stdout + out.stderr)
+
+
+def test_cli_lint_passes_on_repo():
+    out = _cli("--lint")
+    assert out.returncode == 0, out.stdout + out.stderr[-2000:]
+    assert "0 violation(s)" in out.stdout
+
+
+def test_cli_mutation_self_test():
+    """The rules must have teeth: an injected payload all-reduce, a dropped
+    donation, and a bare-assert fixture must each trip their rule (and the
+    clean fixtures must pass).  Compiles one sync + two round programs."""
+    out = _cli("--self-test", timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr[-3000:]
+    assert "0 failure(s)" in out.stdout

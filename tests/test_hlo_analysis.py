@@ -30,6 +30,83 @@ def test_tuple_all_reduce_sums_all_results():
     assert H.collective_bytes(hlo)["all-reduce"] == 64
 
 
+def test_variadic_collective_counts_every_operand_dtype():
+    """Regression (multi-operand byte classification): a variadic
+    all-gather with mixed dtypes must report per-dtype bytes for EVERY
+    operand — the old first-match-per-line dtype let an f32 tensor hide
+    behind an s16 one on a quantized wire."""
+    hlo = ("%t = (s16[4,8]{1,0}, f32[2]{0}) all-gather(s16[1,8] %a, "
+           "f32[1] %b), replica_groups=[1,4]<=[4]\n")
+    op, = H.collective_ops(hlo)
+    assert op["bytes_full"] == 4 * 8 * 2 + 2 * 4  # 64 s16 + 8 f32 = 72
+    assert op["dtypes"] == {"s16": 64, "f32": 8}
+    assert H.collective_bytes(hlo)["all-gather"] == 72
+
+
+def test_scalar_shape_counts_element_bytes():
+    hlo = "%s = f32[] all-reduce(f32[] %a), replica_groups={{0,1}}, to_apply=%add\n"
+    assert H.collective_bytes(hlo)["all-reduce"] == 4
+
+
+def test_async_gather_scatter_start_tuple_not_double_counted():
+    """all-gather-start / reduce-scatter-start results are
+    (operand..., result...) tuples; only the result half is the landing
+    payload."""
+    ag = ("%ag = (f32[4]{0}, f32[16]{0}) all-gather-start(f32[4] %p), "
+          "replica_groups=[1,4]<=[4]\n"
+          "%agd = f32[16]{0} all-gather-done(%ag)\n")
+    assert H.collective_bytes(ag)["all-gather"] == 64
+    assert H.collective_result_bytes(ag)["all-gather"] == 64
+    rs = ("%rs = (f32[16]{0}, f32[4]{0}) reduce-scatter-start(f32[16] %p), "
+          "replica_groups=[1,4]<=[4]\n")
+    op, = H.collective_ops(rs)
+    assert op["bytes_full"] == 64      # the full pre-scatter tensor
+    assert op["bytes_result"] == 16    # the owned chunk
+
+
+def test_payload_profile_classifies_fold_vs_payload_per_dtype():
+    """payload_profile: ops at most fold_limit(n_leaves) bytes are scale
+    folds; bigger ops split per-dtype — a mixed tuple's f32 half above the
+    limit appears as its own payload dtype."""
+    n_leaves = 2   # fold_limit = 72
+    hlo = (
+        "%f = f32[2]{0} all-reduce(f32[2] %s), replica_groups=[1,4]<=[4], "
+        "to_apply=%max\n"                       # 8 bytes: the amax fold
+        "%q = (s16[100]{0}, f32[50]{0}) all-gather(s16[25] %a, f32[13] %b), "
+        "replica_groups=[1,4]<=[4]\n")          # 200 s16 + 200 f32 payload
+    prof = H.payload_profile(hlo, n_leaves=n_leaves)
+    assert prof["amax_fold_ops"] == 1 and prof["amax_fold_bytes"] == 8
+    assert prof["payload_all_reduce_ops"] == 0
+    assert prof["payload_ops_by_dtype"] == {"s16": 1, "f32": 1}
+    assert prof["payload_bytes_by_dtype"] == {"s16": 200, "f32": 200}
+
+
+def test_donation_aliases_parsed_from_header():
+    hdr = ("HloModule jit_round, input_output_alias={ {0}: (0, {}, "
+           "may-alias), {1}: (1, {0}, may-alias) }, "
+           "entry_computation_layout={(f32[8])->f32[8]}\n")
+    assert H.donation_aliases(hdr) == [((0,), 0, ()), ((1,), 1, (0,))]
+    assert H.donation_aliases("HloModule plain\n") == []
+
+
+def test_degenerate_replica_groups_detected():
+    bad = ("%x = f32[8]{0} all-reduce(f32[8] %a), "
+           "replica_groups={{0},{1},{2},{3}}, to_apply=%add\n")
+    assert len(H.degenerate_collectives(bad)) == 1
+    good = ("%x = f32[8]{0} all-reduce(f32[8] %a), "
+            "replica_groups={{0,1},{2,3}}, to_apply=%add\n")
+    assert H.degenerate_collectives(good) == []
+
+
+def test_host_callback_lines_detected():
+    hlo = ('%cc = f32[2]{0} custom-call(f32[2] %a), '
+           'custom_call_target="xla_python_cpu_callback"\n'
+           '%ok = f32[2]{0} custom-call(f32[2] %a), '
+           'custom_call_target="Sharding"\n')
+    lines = H.host_callbacks(hlo)
+    assert len(lines) == 1 and "callback" in lines[0]
+
+
 def test_dci_classification_consecutive_groups():
     # [2,256]<=[512]: groups {0..255}, {256..511} -> intra-pod
     intra = ("%x = f32[100]{0} all-reduce(%a), replica_groups=[2,256]<=[512], "

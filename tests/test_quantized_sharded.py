@@ -34,16 +34,15 @@ def _sync_compare(*extra):
 
 
 def _assert_rs_domain(sh):
-    """The collective budget of one quantized sharded sync."""
-    assert sh["payload_all_reduce_ops"] == 0, sh["collective_counts"]
-    assert sh["amax_fold_ops"] <= 1
-    assert sh["reduce_scatter_ops"] == sh["n_buckets"]
-    assert sh["all_gather_ops"] == sh["n_buckets"]
-    # nothing else on the wire: RS + AG per bucket + the fold, full stop
-    assert sum(sh["collective_counts"].values()) == \
-        2 * sh["n_buckets"] + sh["amax_fold_ops"]
-    # the fold is scalar-sized: one f32 per model tensor
-    assert sh["amax_fold_bytes"] <= 4 * sh["n_leaves"] + 64
+    """The collective budget of one quantized sharded sync — asserted
+    through the shared rule registry (repro.analysis.rules): RS+AG per
+    bucket with zero payload all-reduces and at most one scalar-sized
+    amax fold (collective-budget), integer codes on every payload wire
+    (wire-payload-dtype)."""
+    for rule in ("collective-budget", "wire-payload-dtype"):
+        verdict = sh["rules"][rule]
+        assert verdict["applies"], f"rule {rule} did not apply"
+        assert verdict["ok"], (rule, verdict["violations"])
 
 
 def test_quantized_sharded_rs_domain_lowering_and_exec_dp():
@@ -64,7 +63,10 @@ def test_quantized_sharded_rs_domain_lowering_and_exec_dp():
     wire = sh["rs_wire_bytes"] + sh["ag_wire_bytes"] + sh["amax_fold_bytes"]
     assert wire * 2 <= fl["bytes_on_wire"]
     # the flat quantized sync, by contrast, pays bucket-sized all-reduces
-    # (payload + the GSPMD scale max) — the cost the RS domain removes
+    # (payload + the GSPMD scale max) — the cost the RS domain removes;
+    # its (lower-bound) budget is the same registry rule
+    assert fl["rules"]["collective-budget"]["ok"], \
+        fl["rules"]["collective-budget"]["violations"]
     assert fl["payload_all_reduce_ops"] >= fl["n_buckets"]
     # EXECUTION: bitwise across layouts (the integer-code mean)
     ex = rec["exec"]
@@ -96,10 +98,10 @@ def test_quantized_sharded_with_momentum_keeps_budget():
 
 def test_unquantized_sharded_budget_unchanged():
     """Regression: the plain sharded sync still lowers to exactly one f32
-    reduce_scatter + one all_gather per bucket, no fold, no all-reduce."""
+    reduce_scatter + one all_gather per bucket, no fold, no all-reduce —
+    the collective-budget rule with quantize=False allows zero folds."""
     rec = _sync_compare("--mesh", "4x2", "--param-layout", "flat_sharded")
     sh = rec["flat_sharded"]
-    assert sh["all_reduce_ops"] == 0 and sh["amax_fold_ops"] == 0
-    assert sh["reduce_scatter_ops"] == sh["n_buckets"]
-    assert sh["all_gather_ops"] == sh["n_buckets"]
-    assert sum(sh["collective_counts"].values()) == 2 * sh["n_buckets"]
+    verdict = sh["rules"]["collective-budget"]
+    assert verdict["applies"] and verdict["ok"], verdict["violations"]
+    assert sh["rules_failed"] == []

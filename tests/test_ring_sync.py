@@ -57,11 +57,15 @@ def _sync_compare(*extra):
 
 
 def _assert_all_s8(r, w):
-    """The acceptance predicate: int8 payload on EVERY wire."""
-    assert set(r["payload_ops_by_dtype"]) == {"s8"}, r["payload_ops_by_dtype"]
-    assert r["payload_all_reduce_ops"] == 0
-    assert r["reduce_scatter_ops"] == 0
-    assert r["collective_permute_ops"] >= (w - 1) * r["n_buckets"]
+    """The acceptance predicate — int8 payload on EVERY wire — asserted
+    through the shared rule registry (repro.analysis.rules): s8-only
+    payloads via wire-payload-dtype, zero RS / payload all-reduces and
+    >= (W-1) permute hops per bucket via collective-budget."""
+    assert r["workers"] == w
+    for rule in ("collective-budget", "wire-payload-dtype"):
+        verdict = r["rules"][rule]
+        assert verdict["applies"], f"rule {rule} did not apply"
+        assert verdict["ok"], (rule, verdict["violations"])
 
 
 def test_ring_lowers_all_int8_on_dp_mesh_and_exec_within_tol():
